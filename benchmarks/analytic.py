@@ -1,0 +1,211 @@
+"""Analytic roofline model: exact workload formulas per (arch x shape).
+
+Why this exists: XLA's HloCostAnalysis counts while-loop bodies ONCE, so
+scan-based (time-multiplexed) programs under-report FLOPs/bytes by the
+trip count, and CPU-backend 'bytes accessed' over-reports fused traffic.
+The spatial dry-run fixes the layer loop but not the inner flash/SSD chunk
+scans.  These closed-form counts (validated against the spatial dry-run on
+the dense archs, ratio ~0.9-1.1) are therefore the primary roofline
+source; HLO-derived numbers are the cross-check.
+
+All quantities are per device per step on the single-pod mesh
+(dp x tp = 16 x 16), bf16 matmuls, f32 optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+
+DP, TP = 16, 16
+BF16, F32 = 2, 4
+SSD_CHUNK = 256
+
+
+@dataclasses.dataclass
+class CellModel:
+    arch: str
+    shape: str
+    flops_dev: float          # per device per step
+    mem_dev: float            # HBM bytes per device per step
+    coll_dev: float           # wire bytes per device per step
+    model_flops_dev: float    # 6/2 * N_active * tokens / chips
+
+    @property
+    def terms(self):
+        return {"compute": self.flops_dev / PEAK_FLOPS,
+                "memory": self.mem_dev / HBM_BW,
+                "collective": self.coll_dev / LINK_BW}
+
+    @property
+    def bottleneck(self):
+        t = self.terms
+        return max(t, key=t.get)
+
+    @property
+    def step_time(self):
+        """No-overlap roofline estimate: max of the three terms."""
+        return max(self.terms.values())
+
+    @property
+    def mfu_at_roofline(self):
+        return self.model_flops_dev / PEAK_FLOPS / self.step_time
+
+
+def _per_block_flops(cfg, spec, ctx: float, S_q: int) -> float:
+    """Forward FLOPs per *query token* for one block (whole model, pre-TP)."""
+    D = cfg.d_model
+    if spec.kind == "mamba":
+        d = cfg.ssm
+        din, N, H, G = d.d_inner, d.d_state, d.n_heads, d.n_groups
+        f = 2 * D * (2 * din + 2 * G * N + H)          # in_proj
+        f += 2 * d.d_conv * (din + 2 * G * N)          # conv
+        q_bar = min(SSD_CHUNK, max(S_q, 1)) / 2        # intra-chunk keys
+        f += H * (2 * q_bar * (N + d.head_dim)         # scores + y_diag
+                  + 4 * N * d.head_dim)                # states + y_off
+        f += 2 * din * D                               # out_proj
+        return f
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f = 2 * D * (H + 2 * KH) * hd + 2 * H * hd * D     # qkv + out proj
+    win_ctx = min(ctx, spec.window) if spec.window else ctx
+    f += 4 * H * hd * win_ctx                          # scores + AV
+    if spec.cross:
+        f += 2 * D * (H + 2 * KH) * hd + 2 * H * hd * D + 4 * H * hd * ctx
+    if spec.moe:
+        f += 2 * D * cfg.n_experts                     # router
+        f += cfg.top_k * 6 * D * cfg.expert_d_ff
+        if cfg.n_shared_experts:
+            f += 6 * D * cfg.shared_expert_d_ff
+    else:
+        f += 6 * D * cfg.d_ff
+    return f
+
+
+def _fwd_flops_per_token(cfg, ctx: float, S_q: int) -> float:
+    total = 0.0
+    for stack in cfg.stacks:
+        for spec in stack.blocks:
+            total += stack.count * _per_block_flops(cfg, spec, ctx, S_q)
+    if cfg.encoder is not None:  # encoder processes its own S tokens
+        for stack in cfg.encoder.stacks:
+            for spec in stack.blocks:
+                total += stack.count * _per_block_flops(cfg, spec, ctx, S_q)
+    total += 2 * cfg.d_model * cfg.vocab               # head
+    return total
+
+
+def _param_bytes(cfg, dtype_bytes=F32) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def _cache_bytes_total(cfg, B, S) -> float:
+    total = 0.0
+    for stack in cfg.stacks:
+        for spec in stack.blocks:
+            if spec.kind == "mamba":
+                d = cfg.ssm
+                total += stack.count * B * (
+                    (d.d_conv - 1) * (d.d_inner + 2 * d.n_groups * d.d_state)
+                    * BF16 + d.n_heads * d.d_state * d.head_dim * F32)
+            else:
+                W = min(S, spec.window) if spec.window else S
+                total += stack.count * B * W * cfg.n_kv_heads \
+                    * cfg.head_dim * BF16 * 2
+                if spec.cross:
+                    total += stack.count * B * S * cfg.n_kv_heads \
+                        * cfg.head_dim * BF16 * 2
+    return total
+
+
+def cell_model(arch: str, shape: str, layout: str = "2d",
+               mixed: bool = False, remat: str = "full") -> CellModel:
+    """layout '2d' = DP16 x TP16 baseline; 'fsdp' = 256-way pure FSDP.
+    mixed = bf16 params + f32 master (collectives run in bf16).
+    remat 'full' = recompute everything (mult 4x fwd); 'dots' = save
+    matmul outputs (mult ~3.15x fwd, activation HBM grows ~3x)."""
+    cfg = get_config(arch)
+    S, B, kind = SHAPES[shape]
+    N = cfg.param_count()
+    N_active = cfg.active_param_count()
+    chips = DP * TP
+    dp_eff, tp_eff = (chips, 1) if layout == "fsdp" else (DP, TP)
+    WB = BF16 if mixed else F32     # wire dtype for weight gather/grad red.
+    n_layers = cfg.n_layers
+
+    if kind in ("train", "prefill"):
+        tokens = B * (S - 1 if kind == "train" else S)
+        ctx = S / 2                                     # causal average
+        fwd = _fwd_flops_per_token(cfg, ctx, S) * tokens
+        # active-expert correction: _fwd already uses top_k experts only
+        if kind != "train":
+            mult = 1.0
+        elif remat == "dots":   # only elementwise recomputed in bwd
+            mult = 3.15
+        else:                   # bwd(2) + full remat recompute(1)
+            mult = 4.0
+        flops = fwd * mult
+        flops_dev = flops / chips
+        T_dev = tokens / dp_eff
+        # memory: weights (gathered bf16, fwd+bwd) + opt traffic + act saves
+        w_traffic = (2 if kind == "train" else 1) * N_active * BF16 / tp_eff
+        opt = (8 * N * F32 / chips) if kind == "train" else 0.0
+        act_mult = (4 if kind == "train" else 2) * \
+            (3 if remat == "dots" else 1)
+        acts = n_layers * T_dev * cfg.d_model * BF16 * act_mult
+        mem_dev = w_traffic + opt + acts
+        # collectives: fsdp gather (fwd + bwd-recompute) + grad red. + TP ARs
+        # 'fsdp' layout gathers post-cast (bf16 wire, maybe_gather); the 2d
+        # baseline gathers the stored dtype (f32 unless mixed — observed).
+        gather_B = BF16 if layout == "fsdp" else WB
+        # NB: weight gathers move ALL params (incl. inactive experts) — the
+        # reason pure-FSDP regresses on MoE archs (keep experts sharded!)
+        fsdp = (2 if kind == "train" else 1) * (N * gather_B / tp_eff) \
+            * (dp_eff - 1) / dp_eff
+        if kind != "train":
+            grad_red = 0.0
+        elif layout == "fsdp":   # ZeRO reduce-scatter only
+            grad_red = (N * WB) * (dp_eff - 1) / dp_eff
+        else:                    # ring all-reduce of the TP shard
+            grad_red = 2 * (N * WB / tp_eff) * (dp_eff - 1) / dp_eff
+        tp_ar = 0.0 if tp_eff == 1 else \
+            n_layers * (4 if kind == "train" else 2) \
+            * T_dev * cfg.d_model * BF16 * (tp_eff - 1) / tp_eff
+        coll_dev = fsdp + grad_red + tp_ar
+        model_flops = (6 if kind == "train" else 2) * N_active * tokens
+    else:  # decode: one token per sequence, full cache attended
+        tokens = B
+        fwd = _fwd_flops_per_token(cfg, S, 1) * tokens
+        flops = fwd
+        flops_dev = flops / chips
+        cache = _cache_bytes_total(cfg, B, S)
+        # every data-row reads its TP shard of weights + its cache shard
+        mem_dev = N_active * BF16 / TP + cache / chips + \
+            tokens / DP * cfg.d_model * BF16 * n_layers * 2
+        tp_ar = n_layers * 2 * (tokens / DP) * cfg.d_model * BF16 \
+            * (TP - 1) / TP
+        coll_dev = tp_ar
+        model_flops = 2 * N_active * tokens
+    return CellModel(arch, shape, flops_dev, mem_dev, coll_dev,
+                     model_flops / chips)
+
+
+def main():
+    from repro.configs import ARCHS, skip_reason
+    cols = ("arch,shape,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+            "step_s,mfu_at_roofline")
+    print(cols)
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if skip_reason(arch, shape):
+                continue
+            m = cell_model(arch, shape)
+            t = m.terms
+            print(f"{arch},{shape},{t['compute']:.4g},{t['memory']:.4g},"
+                  f"{t['collective']:.4g},{m.bottleneck},{m.step_time:.4g},"
+                  f"{m.mfu_at_roofline:.3f}")
+
+
+if __name__ == "__main__":
+    main()

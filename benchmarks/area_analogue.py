@@ -1,0 +1,104 @@
+"""The 'area' analogue on TPU: compiled-code size of time-multiplexed vs
+spatial execution.
+
+Two levels:
+  1. overlay kernels — the TM executor (one compiled program for ALL
+     kernels) vs one inlined XLA program per kernel (SCFU analogue);
+     metric: HLO ops + executable bytes + compile seconds.
+  2. LM stacks — scan (tm) vs unrolled (spatial) deepseek-7b-smoke
+     forward: HLO ops and compile time vs layer count.
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _hlo_ops(compiled) -> int:
+    return sum(1 for line in compiled.as_text().splitlines()
+               if "=" in line and not line.lstrip().startswith(("//", "ENTRY",
+                                                                "HloModule")))
+
+
+def _exe_bytes(compiled) -> int:
+    try:
+        m = compiled.memory_analysis()
+        return int(getattr(m, "generated_code_size_in_bytes", 0))
+    except Exception:
+        return 0
+
+
+def run_overlay_level():
+    from repro.core.overlay import compile_program, spatial_jit
+    from repro.core.paper_bench import BENCH_NAMES, benchmark
+    from repro.core.vm import make_context, vm_exec, pad_inputs
+
+    xs = pad_inputs([jnp.zeros(256, jnp.float32)] * 8)
+    # TM executor compiled once
+    ctx = make_context(compile_program(benchmark("chebyshev")).program)
+    t0 = time.perf_counter()
+    tm_compiled = jax.jit(
+        lambda tree, oi, x: vm_exec(tree, oi, x)).lower(
+        ctx.tree(), ctx.out_idx, xs).compile()
+    t_tm = time.perf_counter() - t0
+    tm_ops = _hlo_ops(tm_compiled)
+    rows = [("tm_executor(all kernels)", tm_ops, round(t_tm, 3))]
+    total_sp_ops = 0
+    total_sp_t = 0.0
+    for name in BENCH_NAMES:
+        dfg = benchmark(name)
+        xs_n = [jnp.zeros(256, jnp.float32)] * len(dfg.inputs)
+        t0 = time.perf_counter()
+        from repro.core.vm import dfg_eval
+        sp = jax.jit(lambda *a: [dfg_eval(dfg, dict(zip(dfg.inputs, a)))[o]
+                                 for o in dfg.outputs]).lower(*xs_n).compile()
+        t_sp = time.perf_counter() - t0
+        ops = _hlo_ops(sp)
+        total_sp_ops += ops
+        total_sp_t += t_sp
+        rows.append((f"spatial:{name}", ops, round(t_sp, 3)))
+    rows.append(("spatial:TOTAL(8 kernels)", total_sp_ops,
+                 round(total_sp_t, 3)))
+    return rows, tm_ops, total_sp_ops
+
+
+def run_lm_level():
+    from repro.configs import get_smoke_config
+    from repro.models import forward, init_params
+
+    cfg = get_smoke_config("deepseek-7b")
+    cfg = dataclasses.replace(
+        cfg, stacks=(dataclasses.replace(cfg.stacks[0], count=8),))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 32), jnp.int32)
+    out = []
+    for mode, scan in (("tm(scan)", True), ("spatial(unroll)", False)):
+        c = dataclasses.replace(cfg, scan_layers=scan)
+        t0 = time.perf_counter()
+        comp = jax.jit(lambda p, t: forward(c, p, t)[0]).lower(
+            params, toks).compile()
+        dt = time.perf_counter() - t0
+        out.append((f"lm8:{mode}", _hlo_ops(comp), round(dt, 3)))
+    return out
+
+
+def main():
+    rows, tm_ops, sp_ops = run_overlay_level()
+    rows += run_lm_level()
+    print("name,hlo_ops,compile_s")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    red = 100 * (1 - tm_ops / sp_ops)
+    print(f"# overlay-level 'area' reduction (one TM executor vs 8 spatial "
+          f"programs): {red:.1f}% fewer HLO ops")
+    lm = {r[0]: r for r in rows if r[0].startswith("lm8")}
+    lm_red = 100 * (1 - lm["lm8:tm(scan)"][1] / lm["lm8:spatial(unroll)"][1])
+    print(f"# lm-level HLO reduction (scan vs unroll, 8 layers): "
+          f"{lm_red:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

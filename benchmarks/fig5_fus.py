@@ -1,0 +1,37 @@
+"""Fig. 5 reproduction: FUs required, proposed TM overlay vs SCFU-SCN.
+
+The proposed overlay needs #FUs = graph depth (one per ASAP stage); a
+spatially-configured overlay needs one FU per op node.  The paper reports
+'up to 63%' FU reduction; exact per-benchmark SCFU FU counts are only
+plotted (Fig. 5), so we derive them as op nodes (one FU per operation,
+the SCFU-SCN definition in Section I) and report the reduction.
+Pipelines longer than 8 FUs cascade two 8-FU pipelines (Section V).
+"""
+
+from repro.core.area import pipelines_needed
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.core.schedule import schedule
+
+
+def run():
+    rows = []
+    for name in BENCH_NAMES:
+        sch = schedule(benchmark(name))
+        tm, sp = sch.n_fus, sch.spatial_fus
+        rows.append((name, tm, sp, round(100 * (1 - tm / sp), 1),
+                     pipelines_needed(tm)))
+    return ("name,tm_fus,scfu_fus,reduction_pct,pipelines").split(","), rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    # paper: significant reduction, >8-FU benchmarks cascade 2 pipelines
+    assert max(r[3] for r in rows) >= 60.0
+    assert all((r[4] == 2) == (r[1] > 8) for r in rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline assembly: read dry-run artifacts -> per-cell three-term table.
+
+Primary FLOPs/collective numbers come from the SPATIAL dry-run (layer
+stacks unrolled => XLA cost analysis and HLO-text collective parsing see
+every layer; scan-mode while bodies are counted once by HloCostAnalysis).
+Memory-fit numbers (argument/temp bytes per device) come from the TM
+dry-run (the deployed execution mode).
+"""
+
+import glob
+import json
+import os
+
+from repro.launch import dryrun as D
+
+
+def load(outdir):
+    recs = {}
+    for f in glob.glob(os.path.join(outdir, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def table(spatial_dir="artifacts/dryrun_spatial", tm_dir="artifacts/dryrun"):
+    sp = load(spatial_dir)
+    tm = load(tm_dir)
+    rows = []
+    for (arch, shape, mesh), r in sorted(tm.items()):
+        if mesh != "single":
+            continue
+        key = (arch, shape, mesh)
+        use = sp.get(key, r)
+        if "skipped" in r:
+            rows.append({"arch": arch, "shape": shape,
+                         "skipped": r["skipped"]})
+            continue
+        if "error" in use:
+            use = r
+        if "error" in use:
+            rows.append({"arch": arch, "shape": shape,
+                         "error": use["error"]})
+            continue
+        rf = use.get("roofline", {})
+        mem = r.get("memory", {})
+        terms = {k: rf.get(f"t_{k}_s") for k in
+                 ("compute", "memory", "collective")}
+        dom = max((v, k) for k, v in terms.items() if v is not None)[1]
+        peak = rf.get("model_flops_per_device", 0) / D.PEAK_FLOPS
+        denom = max(v for v in terms.values() if v is not None)
+        rows.append({
+            "arch": arch, "shape": shape,
+            "t_compute_s": terms["compute"],
+            "t_memory_s": terms["memory"],
+            "t_collective_s": terms["collective"],
+            "bottleneck": dom,
+            "model_flops": rf.get("model_flops_total"),
+            "useful_ratio": rf.get("useful_flops_ratio"),
+            "roofline_fraction": peak / denom if denom else None,
+            "hbm_args_gb": mem.get("argument_size_in_bytes", 0) / 2 ** 30,
+            "hbm_temp_gb": mem.get("temp_size_in_bytes", 0) / 2 ** 30,
+            "source": "spatial" if key in sp and "error" not in sp[key]
+                      else "tm",
+        })
+    return rows
+
+
+def main():
+    rows = table()
+    cols = ("arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+            "bottleneck", "roofline_fraction", "useful_ratio",
+            "hbm_temp_gb", "source")
+    print(",".join(cols))
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},SKIP({r['skipped'][:40]})")
+            continue
+        if "error" in r:
+            print(f"{r['arch']},{r['shape']},ERROR")
+            continue
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Table II reproduction: DFG characteristics of the benchmark set."""
+
+from repro.core.area import PAPER_BY_NAME
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.core.schedule import schedule
+
+
+def run():
+    rows = []
+    header = ("name", "io", "edges", "ops", "depth", "par", "II", "eOPC",
+              "match")
+    for name in BENCH_NAMES:
+        dfg = benchmark(name)
+        sch = schedule(dfg)
+        st = dfg.stats()
+        row = PAPER_BY_NAME[name]
+        ok = (st["io_nodes"] == (row.n_in, row.n_out)
+              and st["graph_edges"] == row.edges
+              and st["op_nodes"] == row.ops
+              and st["graph_depth"] == row.depth
+              and abs(st["average_parallelism"] - row.parallelism) < 0.02
+              and sch.ii == row.ii
+              and abs(sch.eopc - row.eopc) < 0.05)
+        rows.append((name, f"{row.n_in}/{row.n_out}", st["graph_edges"],
+                     st["op_nodes"], st["graph_depth"],
+                     st["average_parallelism"], sch.ii, sch.eopc,
+                     "EXACT" if ok else "MISMATCH"))
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    assert all(r[-1] == "EXACT" for r in rows), "Table II mismatch"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The paper's linear TM-FU pipeline carrying real transformer stages.
+
+    PYTHONPATH=src python examples/pipeline_lm.py
+
+Maps a 4-stage decoder onto a 4-device ring (simulated via
+--xla_force_host_platform_device_count): stage s = FU s, time-multiplexed
+over its layer slice; microbatches stream through ppermute neighbour
+links; output checked against sequential execution; the paper's II model
+is printed for the chosen (M, S).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro.models.layers import (AttnDims, attention_apply,
+                                     init_attention, init_mlp, init_norm,
+                                     mlp_apply, rms_norm)
+    from repro.runtime.pipeline import (pipeline_apply, pipeline_ii,
+                                        pipeline_reference)
+
+    S_STAGES, M, mb, seq, d = 4, 8, 2, 32, 64
+    dims = AttnDims(4, 2, 16)
+    mesh = jax.make_mesh((S_STAGES,), ("stage",))
+
+    def init_stage(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"ln1": init_norm(k1, d), "attn": init_attention(k2, d, dims),
+                "ln2": init_norm(k3, d), "mlp": init_mlp(k4, d, 4 * d)}
+
+    keys = jax.random.split(jax.random.PRNGKey(0), S_STAGES)
+    stage_params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[init_stage(k) for k in keys])
+
+    def stage_fn(p, h):
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], h.shape[:2])
+        h = h + attention_apply(p["attn"], rms_norm(p["ln1"], h), dims=dims,
+                                positions=pos, causal=True)
+        return h + mlp_apply(p["mlp"], rms_norm(p["ln2"], h))
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, seq, d),
+                          jnp.float32) * 0.1
+    y = pipeline_apply(mesh, stage_fn, stage_params, x)
+    ref = pipeline_reference(stage_fn, stage_params, x)
+    err = float(jnp.max(jnp.abs(y - ref)))
+    ii = pipeline_ii(M, S_STAGES)
+    print(f"{S_STAGES}-stage transformer pipeline on a device ring: "
+          f"max|err| vs sequential = {err:.2e}")
+    print(f"II model: {ii['slots']} slots for {M} microbatches, "
+          f"bubble {ii['bubble_fraction']:.1%}, "
+          f"II/output {ii['ii_per_output']:.3f} "
+          f"(paper: replication drives II -> 1)")
+    assert err < 5e-4
+
+
+if __name__ == "__main__":
+    main()

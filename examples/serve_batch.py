@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + streaming greedy decode.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma3-4b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    from repro.launch.serve import main as serve_main
+    return serve_main(["--arch", args.arch, "--smoke",
+                       "--batch", str(args.batch),
+                       "--prompt-len", str(args.prompt_len),
+                       "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

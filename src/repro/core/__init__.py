@@ -1,0 +1,22 @@
+"""The paper's primary contribution: an area-efficient overlay built from
+linearly-connected, time-multiplexed functional units.
+
+Pipeline: frontend (HLL->DFG) -> schedule (ASAP staging + bypass + II) ->
+isa (32-bit no-decoder words, 40-bit context stream) -> overlay executor
+(compile-once VM / Pallas TMFU kernel, context switch = data swap).
+Analytical models in ``area`` reproduce the paper's Tables II/III.
+"""
+
+from repro.core.dfg import DFG, Node, Op
+from repro.core.frontend import build_dfg
+from repro.core.schedule import Schedule, schedule
+from repro.core.isa import Program, encode
+from repro.core.overlay import (CompiledKernel, Overlay, compile_program,
+                                spatial_jit)
+from repro.core.vm import dfg_eval
+
+__all__ = [
+    "DFG", "Node", "Op", "build_dfg", "Schedule", "schedule", "Program",
+    "encode", "CompiledKernel", "Overlay", "compile_program", "spatial_jit",
+    "dfg_eval",
+]

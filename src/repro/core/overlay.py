@@ -1,0 +1,116 @@
+"""The overlay object: compile-once executor + fast context switching.
+
+Public API::
+
+    ov = Overlay(s_max=16)                      # 'configure the FPGA' once
+    ctx = ov.load(compile_program(dfg))         # context switch (no recompile)
+    ys = ov(ctx, xs)                            # stream a batch through
+
+``Overlay.load`` is the paper's 0.27 µs daisy-chain analogue: only int32
+instruction words + constant tables move; the XLA executable is untouched.
+``spatial_jit`` is the SCFU-SCN / vendor-flow analogue: the DFG is inlined
+into a fresh XLA program (1 HLO op per DFG node) and must be recompiled per
+kernel.  benchmarks/context_switch.py and benchmarks/area_analogue.py
+measure the two against each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vm
+from repro.core.dfg import DFG
+from repro.core.isa import Program, encode
+from repro.core.schedule import Schedule, schedule
+from repro.core.vm import Context, dfg_eval, make_context, pad_inputs
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    dfg: DFG
+    sched: Schedule
+    program: Program
+
+
+def compile_program(dfg: DFG) -> CompiledKernel:
+    """Full mapping flow: DFG -> schedule -> encoded context image."""
+    sched = schedule(dfg)
+    program = encode(sched)
+    # record the RF slots of the primary outputs in the final stage stream
+    final = sched.stages[-1]
+    slot_of = {ins.dest: i for i, ins in enumerate(final.instrs)}
+    program._output_slots = np.asarray(
+        [slot_of[o] for o in dfg.outputs], dtype=np.int32)
+    return CompiledKernel(dfg=dfg, sched=sched, program=program)
+
+
+class Overlay:
+    """A fixed executor for a family of kernels (<= s_max stages)."""
+
+    def __init__(self, s_max: int = vm.S_MAX, dtype=jnp.float32,
+                 backend: str = "jnp"):
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.s_max = s_max
+        self.dtype = dtype
+        self.backend = backend
+
+    # --------------------------------------------------------------- context
+    def load(self, kernel: CompiledKernel) -> Context:
+        """Context switch: build + device_put the instruction image."""
+        ctx = make_context(kernel.program, self.s_max, self.dtype)
+        return jax.tree.map(
+            lambda x: jax.device_put(x) if isinstance(x, jax.Array) else x,
+            ctx, is_leaf=lambda x: isinstance(x, jax.Array))
+
+    # --------------------------------------------------------------- execute
+    def __call__(self, ctx: Context, xs: list[jax.Array]) -> list[jax.Array]:
+        x = pad_inputs([jnp.asarray(v, self.dtype) for v in xs])
+        if self.backend == "pallas":
+            from repro.kernels.tmfu import ops as tmfu_ops
+            ys = tmfu_ops.tmfu_pipeline(ctx, x)
+        else:
+            ys = vm.vm_exec(ctx.tree(), ctx.out_idx, x)
+        return [ys[i] for i in range(ctx.n_outputs)]
+
+    # ------------------------------------------------------------ timing
+    def time_context_switch(self, kernel: CompiledKernel,
+                            iters: int = 20) -> float:
+        """Median seconds to swap a kernel onto the live overlay."""
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            ctx = self.load(kernel)
+            jax.block_until_ready(ctx.op)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+def spatial_jit(dfg: DFG):
+    """SCFU-SCN analogue: the DFG inlined into its own XLA program."""
+
+    @jax.jit
+    def run(xs: list[jax.Array]) -> list[jax.Array]:
+        env = {name: x for name, x in zip(dfg.inputs, xs)}
+        out = dfg_eval(dfg, env)
+        return [out[o] for o in dfg.outputs]
+
+    return run
+
+
+def time_recompile(dfg: DFG, xs, iters: int = 3) -> float:
+    """Seconds for the vendor-flow analogue: fresh trace + XLA compile."""
+    ts = []
+    for _ in range(iters):
+        fn = spatial_jit(dfg)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(xs))
+        ts.append(time.perf_counter() - t0)
+        fn._clear_cache()
+    return float(np.median(ts))

@@ -1,0 +1,190 @@
+"""Pure-JAX overlay virtual machine.
+
+Executes an encoded overlay ``Program`` (isa.py) with *instructions as
+data*: the executor is traced/compiled ONCE for a (max-stages, RF depth,
+batch-tile) family, and a kernel change is a context switch — new int32
+instruction words + constant tables are streamed in, nothing is recompiled.
+This is the TPU analogue of the paper's daisy-chained 40-bit context load
+(Section III-A) vs. the vendor-tool / partial-reconfiguration flow.
+
+Semantics mirror the hardware: a linear cascade of stages (lax.scan = the
+direct FU->FU interconnect); within a stage, a fori_loop time-multiplexes
+the FU over its instruction memory; the register file holds the words
+streamed from the previous stage; results stream out in instruction order.
+
+The datapath is vectorized over a batch of independent kernel iterations
+(the VPU-lane equivalent of replicating pipelines, paper Fig. 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.core.dfg import CONST_OPS, DFG, Op
+from repro.core.isa import IM_DEPTH, RF_DEPTH, Program
+
+#: default maximum pipeline length: two cascaded 8-FU pipelines (paper V)
+S_MAX = 16
+
+
+def _branches(dtype):
+    """Branch table indexed by Op — the no-decoder dispatch."""
+    def _bitwise(fn):
+        def g(a, b, imm):
+            if jnp.issubdtype(dtype, jnp.floating):
+                it = jnp.int32 if dtype.itemsize == 4 else jnp.int16
+                ia = jax.lax.bitcast_convert_type(a, it)
+                ib = jax.lax.bitcast_convert_type(b, it)
+                return jax.lax.bitcast_convert_type(fn(ia, ib), dtype)
+            return fn(a, b)
+        return g
+
+    return [
+        lambda a, b, imm: a,                      # BYP
+        lambda a, b, imm: a + b,                  # ADD
+        lambda a, b, imm: a - b,                  # SUB
+        lambda a, b, imm: a * b,                  # MUL
+        lambda a, b, imm: a + imm,                # ADDC
+        lambda a, b, imm: a - imm,                # SUBC
+        lambda a, b, imm: imm - a,                # RSUBC
+        lambda a, b, imm: a * imm,                # MULC
+        lambda a, b, imm: a * a,                  # SQR
+        lambda a, b, imm: jnp.maximum(a, b),      # MAX
+        lambda a, b, imm: jnp.minimum(a, b),      # MIN
+        lambda a, b, imm: jnp.abs(a),             # ABS
+        lambda a, b, imm: -a,                     # NEG
+        _bitwise(jnp.bitwise_and),                # AND
+        _bitwise(jnp.bitwise_or),                 # OR
+        _bitwise(jnp.bitwise_xor),                # XOR
+        lambda a, b, imm: a,                      # OUT
+        lambda a, b, imm: jnp.zeros_like(a),      # NOP
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Context:
+    """Device-resident overlay context (the '40-bit word stream' image)."""
+
+    op: jax.Array      # [S_MAX, IM_DEPTH] int32
+    src_a: jax.Array   # [S_MAX, IM_DEPTH] int32
+    src_b: jax.Array   # [S_MAX, IM_DEPTH] int32
+    imm: jax.Array     # [S_MAX, IM_DEPTH] dtype (const table, pre-gathered)
+    out_idx: jax.Array  # [n_outputs] int32 — RF slots of the primary outputs
+    n_inputs: int
+    n_outputs: int
+    context_bytes: int
+
+    def tree(self):
+        return (self.op, self.src_a, self.src_b, self.imm)
+
+
+def make_context(program: Program, s_max: int = S_MAX,
+                 dtype=jnp.float32) -> Context:
+    """Encode a Program into dense executor arrays (context switch image)."""
+    S = len(program.images)
+    if S > s_max:
+        raise ValueError(f"{program.name}: {S} stages > s_max={s_max}")
+    # identity padding: BYP slot i -> rf[i]; pads both unused instruction
+    # slots inside live stages (beyond that stage's stream) and whole stages.
+    op = np.full((s_max, IM_DEPTH), int(Op.BYP), np.int32)
+    a_ = np.tile(np.arange(IM_DEPTH, dtype=np.int32), (s_max, 1))
+    b_ = a_.copy()
+    imm = np.zeros((s_max, IM_DEPTH), np.float64)
+    for s, img in enumerate(program.images):
+        for slot, w in enumerate(img.words):
+            o, dest, sa, sb = isa.unpack_word(int(w))
+            assert dest == slot
+            op[s, slot] = int(o)
+            a_[s, slot] = sa
+            if o in CONST_OPS:
+                imm[s, slot] = float(img.consts[sb])
+                b_[s, slot] = sa
+            else:
+                b_[s, slot] = sb
+    # primary outputs: slots in the final stage's output stream
+    final = program.images[-1]
+    # stream order == instruction order; outputs are the last-stage dests
+    # whose value names are the DFG outputs — recover via dest slots:
+    # encode() guarantees dest slot == instruction position.
+    out_idx = _output_slots(program)
+    return Context(op=jnp.asarray(op), src_a=jnp.asarray(a_),
+                   src_b=jnp.asarray(b_), imm=jnp.asarray(imm, dtype=dtype),
+                   out_idx=jnp.asarray(out_idx, dtype=jnp.int32),
+                   n_inputs=program.n_inputs, n_outputs=program.n_outputs,
+                   context_bytes=program.context_bytes)
+
+
+def _output_slots(program: Program) -> np.ndarray:
+    # The Program does not carry value names; the schedule guarantees the
+    # final stage's stream contains the outputs. We record output slots at
+    # encode time via a side table attached by overlay.compile_program.
+    slots = getattr(program, "_output_slots", None)
+    if slots is None:
+        # default: the last n_outputs instructions of the final stage
+        n = len(program.images[-1].words)
+        return np.arange(n - program.n_outputs, n, dtype=np.int32)
+    return np.asarray(slots, dtype=np.int32)
+
+
+@partial(jax.jit, static_argnames=("rf_depth",))
+def vm_exec(ctx_tree, out_idx, x, rf_depth: int = RF_DEPTH):
+    """Run the overlay: x [rf_depth, batch] -> outputs [n_out, batch].
+
+    ``x`` carries the primary inputs in slots [0, n_inputs); the caller pads.
+    Compiled once per (shape, dtype); ctx_tree is data.
+    """
+    op, src_a, src_b, imm = ctx_tree
+    branches = _branches(x.dtype)
+
+    def stage_fn(rf, stage):
+        s_op, s_a, s_b, s_imm = stage
+
+        def instr(i, out):
+            va = rf[s_a[i]]
+            vb = rf[s_b[i]]
+            res = jax.lax.switch(s_op[i], branches, va, vb, s_imm[i])
+            return out.at[i].set(res)
+
+        out = jax.lax.fori_loop(0, op.shape[1], instr,
+                                jnp.zeros_like(rf), unroll=True)
+        return out, None
+
+    rf, _ = jax.lax.scan(stage_fn, x, (op, src_a, src_b, imm))
+    return rf[out_idx]
+
+
+def pad_inputs(xs: list[jax.Array], rf_depth: int = RF_DEPTH) -> jax.Array:
+    """Stack primary inputs into the [rf_depth, batch] RF image."""
+    batch = xs[0].shape
+    x = jnp.zeros((rf_depth, *batch), dtype=xs[0].dtype)
+    for i, v in enumerate(xs):
+        x = x.at[i].set(v)
+    return x
+
+
+# ------------------------------------------------------------------- oracle
+def dfg_eval(dfg: DFG, env: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """Direct jnp evaluation of the DFG — the functional oracle."""
+    vals = dict(env)
+    for n in dfg.topo_order():
+        node = dfg.nodes[n]
+        a = vals[node.args[0]]
+        b = vals[node.args[1]] if len(node.args) > 1 else a
+        imm = node.imm
+        fn = {
+            Op.BYP: lambda: a, Op.ADD: lambda: a + b, Op.SUB: lambda: a - b,
+            Op.MUL: lambda: a * b, Op.ADDC: lambda: a + imm,
+            Op.SUBC: lambda: a - imm, Op.RSUBC: lambda: imm - a,
+            Op.MULC: lambda: a * imm, Op.SQR: lambda: a * a,
+            Op.MAX: lambda: jnp.maximum(a, b),
+            Op.MIN: lambda: jnp.minimum(a, b),
+            Op.ABS: lambda: jnp.abs(a), Op.NEG: lambda: -a,
+        }[node.op]
+        vals[n] = fn()
+    return {o: vals[o] for o in dfg.outputs}

@@ -1,0 +1,150 @@
+"""Sharded checkpoint/restore with integrity manifest + async writes.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure, shapes, dtypes, crc32 per leaf
+            <leaf-name>.npy     one file per pytree leaf
+
+Design points for 1000+ nodes (documented; exercised here single-host):
+  * each host writes only the leaves (or leaf shards) it owns — the leaf
+    files here are written from fully-addressable arrays, the multi-host
+    variant writes `leaf.<shard>.npy` per process with the same manifest;
+  * writes go to a temp dir + atomic rename, so a failure mid-save never
+    corrupts the latest-good checkpoint;
+  * async: `save_async` snapshots to host memory (device_get) then writes
+    on a worker thread, double-buffered so at most one write is in flight;
+  * restore verifies crc32 per leaf and can re-shard onto a DIFFERENT mesh
+    (elastic restart path: distributed/elastic.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+_SAFE = re.compile(r"[^a-zA-Z0-9_.-]+")
+
+#: dtypes numpy's npy format can't express — stored as same-width uints
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _leaf_name(path) -> str:
+    return _SAFE.sub("_", jax.tree_util.keystr(path)).strip("_") or "root"
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = [_leaf_name(p) for p, _ in leaves]
+    assert len(set(names)) == len(names), "leaf name collision"
+    return names, [v for _, v in leaves]
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Synchronous checkpoint write. Returns the checkpoint path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    names, leaves = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if logical in _EXOTIC:   # npy can't round-trip bf16/f8 portably
+            arr = arr.view(_EXOTIC[logical])
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape), "dtype": logical,
+            "crc32": zlib.crc32(arr.tobytes()),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Double-buffered async writer: snapshot on call, write on a thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, step: int, tree, extra=None):
+        self.wait()   # at most one write in flight
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(list_steps(self.ckpt_dir))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, tree_like, step: int | None = None,
+            shardings=None, verify: bool = True):
+    """Restore into the structure of ``tree_like``; optionally re-shard.
+
+    ``shardings``: optional pytree of NamedSharding for the TARGET mesh —
+    this is the elastic-restart path (checkpoint written on mesh A,
+    restored onto mesh B).
+    Returns (tree, step, extra)."""
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves = _flatten(tree_like)
+    paths, treedef = jax.tree_util.tree_flatten(tree_like)
+    out = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(names))
+    for name, like, shd in zip(names, leaves, shard_leaves):
+        meta = manifest["leaves"][name]
+        arr = np.load(os.path.join(path, name + ".npy"))
+        if verify and zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for leaf {name}")
+        if meta["dtype"] in _EXOTIC:
+            import ml_dtypes
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {like.shape}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step, \
+        manifest.get("extra", {})

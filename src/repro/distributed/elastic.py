@@ -1,0 +1,72 @@
+"""Elastic scaling + straggler mitigation (simulated on CPU, mesh-real).
+
+Node-failure recovery path:
+  1. a device set shrinks (simulated by dropping devices from the list),
+  2. ``remesh`` builds the largest consistent (data, model) mesh from the
+     survivors (keeping the model axis intact when possible),
+  3. ``reshard_tree`` re-device_puts the last checkpoint onto the new mesh
+     with freshly derived PartitionSpecs,
+  4. training resumes; the data pipeline cursor comes from the checkpoint.
+
+Straggler mitigation: at scale the slowest data-parallel worker sets the
+step time.  ``straggler_scale`` implements deadline-skip with gradient
+rescaling — microbatches that miss the deadline are dropped and the
+summed gradient is rescaled by kept/total so the estimator stays unbiased
+(bounded staleness).  The deadline signal is an input (on TPU pods it
+comes from host-side timers), which keeps the function pure/jittable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh_from_devices
+
+
+def remesh(devices, model_parallel: int = 16):
+    """Largest consistent mesh from the surviving device list."""
+    return make_mesh_from_devices(devices, model_parallel)
+
+
+def reshard_tree(tree, spec_tree, mesh):
+    """device_put every leaf onto ``mesh`` with its PartitionSpec."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: not isinstance(x, (dict, list)))
+
+
+def straggler_scale(grads_sum, kept: jax.Array, total: int):
+    """Rescale a sum-of-microbatch gradient after deadline skips.
+
+    grads_sum = sum over kept microbatches; kept = how many arrived.
+    Returns the unbiased mean-equivalent gradient."""
+    scale = jnp.where(kept > 0, 1.0 / jnp.maximum(kept, 1), 0.0)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads_sum)
+
+
+def accumulate_with_deadline(grad_fn, params, microbatches, arrived_mask):
+    """Gradient accumulation that skips 'late' microbatches.
+
+    arrived_mask [M] bool — which microbatches met the deadline (in a real
+    deployment this comes from per-worker heartbeats; tests drive it).
+    """
+    M = arrived_mask.shape[0]
+
+    def body(carry, xs):
+        acc, kept = carry
+        mb, ok = xs
+        g = grad_fn(params, mb)
+        acc = jax.tree.map(
+            lambda a, gi: a + jnp.where(ok, gi, jnp.zeros_like(gi)), acc, g)
+        return (acc, kept + ok.astype(jnp.int32)), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (acc, kept), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.int32)),
+        (microbatches, arrived_mask))
+    return straggler_scale(acc, kept, M), kept

@@ -1,0 +1,5 @@
+from repro.kernels.tmfu.ops import tmfu_pipeline
+from repro.kernels.tmfu.kernel import tmfu_pipeline_rf
+from repro.kernels.tmfu.ref import tmfu_ref
+
+__all__ = ["tmfu_pipeline", "tmfu_pipeline_rf", "tmfu_ref"]

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: the time-multiplexed FU pipeline (paper Fig. 2/3).
+
+Mapping of the paper's FU onto the TPU memory hierarchy:
+
+  * Instruction memory (32x32 RAM32M)  -> int32 words in SMEM, delivered by
+    scalar prefetch (PrefetchScalarGridSpec) so the VPU datapath never
+    stalls on instruction fetch — the analogue of the FU's dedicated IM.
+  * Register file (32-entry RAM32M)    -> a (32, bt) VMEM scratch buffer;
+    'bt' lanes execute the same instruction on independent kernel
+    iterations (vectorized pipeline replication, paper Fig. 4).
+  * DSP48E1 + config bits, no decoder  -> jax.lax.switch branch table on the
+    5-bit opcode field; operands gathered by dynamic row index (the 5-bit
+    RF addresses).
+  * Linear FU->FU interconnect         -> stage loop ping-ponging two VMEM
+    buffers: stage s writes its full result stream, which IS stage s+1's
+    register file (direct connection, no programmable routing).
+
+The grid tiles the batch; each grid step streams one (32, bt) tile through
+all S stages.  Immediates ride in SMEM as int32 bit-patterns of the f32
+constants (bitcast back inside the kernel) so every context word stays a
+plain 32-bit integer, like the hardware's 40-bit context stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.isa import IM_DEPTH, RF_DEPTH
+
+DEFAULT_BLOCK_BATCH = 512
+
+
+def _branch_table(dtype):
+    """Opcode-indexed branch table; operands are (1, bt) vectors."""
+    def _bitwise(fn):
+        def g(va, vb, cv):
+            if jnp.issubdtype(dtype, jnp.floating):
+                it = jnp.int32 if dtype.itemsize == 4 else jnp.int16
+                ia = jax.lax.bitcast_convert_type(va, it)
+                ib = jax.lax.bitcast_convert_type(vb, it)
+                return jax.lax.bitcast_convert_type(fn(ia, ib), dtype)
+            return fn(va, vb)
+        return g
+
+    return [
+        lambda va, vb, cv: va,                     # BYP
+        lambda va, vb, cv: va + vb,                # ADD
+        lambda va, vb, cv: va - vb,                # SUB
+        lambda va, vb, cv: va * vb,                # MUL
+        lambda va, vb, cv: va + cv,                # ADDC
+        lambda va, vb, cv: va - cv,                # SUBC
+        lambda va, vb, cv: cv - va,                # RSUBC
+        lambda va, vb, cv: va * cv,                # MULC
+        lambda va, vb, cv: va * va,                # SQR
+        lambda va, vb, cv: jnp.maximum(va, vb),    # MAX
+        lambda va, vb, cv: jnp.minimum(va, vb),    # MIN
+        lambda va, vb, cv: jnp.abs(va),            # ABS
+        lambda va, vb, cv: -va,                    # NEG
+        _bitwise(jnp.bitwise_and),                 # AND
+        _bitwise(jnp.bitwise_or),                  # OR
+        _bitwise(jnp.bitwise_xor),                 # XOR
+        lambda va, vb, cv: va,                     # OUT
+        lambda va, vb, cv: jnp.zeros_like(va),     # NOP
+    ]
+
+
+def _tmfu_kernel(op_ref, a_ref, b_ref, imm_ref,   # scalar-prefetch (SMEM)
+                 x_ref, o_ref,                    # VMEM in/out tiles
+                 rf_a, rf_b,                      # VMEM scratch (ping-pong)
+                 *, n_stages: int, dtype):
+    branches = _branch_table(dtype)
+    is_float = jnp.issubdtype(dtype, jnp.floating)
+
+    rf_a[...] = x_ref[...]
+
+    def stage_body(s, _):
+        # ping-pong: even stages read rf_a/write rf_b, odd the reverse
+        def instr_body(i, _):
+            va_a = pl.load(rf_a, (pl.ds(a_ref[s, i], 1), slice(None)))
+            va_b = pl.load(rf_b, (pl.ds(a_ref[s, i], 1), slice(None)))
+            vb_a = pl.load(rf_a, (pl.ds(b_ref[s, i], 1), slice(None)))
+            vb_b = pl.load(rf_b, (pl.ds(b_ref[s, i], 1), slice(None)))
+            even = s % 2 == 0
+            va = jnp.where(even, va_a, va_b)
+            vb = jnp.where(even, vb_a, vb_b)
+            raw = imm_ref[s, i]
+            if is_float:
+                cv = jax.lax.bitcast_convert_type(
+                    raw, jnp.float32).astype(dtype)
+            else:
+                cv = raw.astype(dtype)
+            res = jax.lax.switch(op_ref[s, i], branches, va, vb, cv)
+
+            @pl.when(even)
+            def _():
+                pl.store(rf_b, (pl.ds(i, 1), slice(None)), res)
+
+            @pl.when(jnp.logical_not(even))
+            def _():
+                pl.store(rf_a, (pl.ds(i, 1), slice(None)), res)
+            return 0
+
+        jax.lax.fori_loop(0, op_ref.shape[1], instr_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, n_stages, stage_body, 0)
+    # after S stages the live RF is rf_a if S even else rf_b
+    if n_stages % 2 == 0:
+        o_ref[...] = rf_a[...]
+    else:
+        o_ref[...] = rf_b[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def tmfu_pipeline_rf(op, src_a, src_b, imm_i32, x,
+                     block_batch: int = DEFAULT_BLOCK_BATCH,
+                     interpret: bool = True):
+    """Run the overlay pipeline: x [RF_DEPTH, B] -> final RF [RF_DEPTH, B].
+
+    op/src_a/src_b: [S, IM_DEPTH] int32; imm_i32: int32 bit-patterns of the
+    f32 immediates (or raw ints for integer datapaths).  B must be a
+    multiple of ``block_batch``.
+    """
+    n_stages, im = op.shape
+    rf_depth, batch = x.shape
+    assert rf_depth == RF_DEPTH and im == IM_DEPTH
+    assert batch % block_batch == 0, (batch, block_batch)
+    dtype = x.dtype
+
+    grid = (batch // block_batch,)
+    kernel = functools.partial(_tmfu_kernel, n_stages=n_stages, dtype=dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[pl.BlockSpec((RF_DEPTH, block_batch),
+                                   lambda t, *_: (0, t))],
+            out_specs=pl.BlockSpec((RF_DEPTH, block_batch),
+                                   lambda t, *_: (0, t)),
+            scratch_shapes=[pltpu.VMEM((RF_DEPTH, block_batch), dtype),
+                            pltpu.VMEM((RF_DEPTH, block_batch), dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((RF_DEPTH, batch), dtype),
+        interpret=interpret,
+    )(op, src_a, src_b, imm_i32, x)

@@ -1,0 +1,45 @@
+"""Public jit'd wrapper for the TMFU pipeline kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.isa import RF_DEPTH
+from repro.kernels.tmfu.kernel import (DEFAULT_BLOCK_BATCH,
+                                       tmfu_pipeline_rf)
+
+
+def _imm_to_i32(imm: jax.Array) -> jax.Array:
+    """Pack immediates as int32 context words (bitcast f32 for float paths)."""
+    if jnp.issubdtype(imm.dtype, jnp.floating):
+        return jax.lax.bitcast_convert_type(
+            imm.astype(jnp.float32), jnp.int32)
+    return imm.astype(jnp.int32)
+
+
+def tmfu_pipeline(ctx, x: jax.Array,
+                  block_batch: int = DEFAULT_BLOCK_BATCH,
+                  interpret: bool | None = None) -> jax.Array:
+    """Execute an overlay Context on the Pallas datapath.
+
+    ctx: repro.core.vm.Context;  x: [RF_DEPTH, batch] input RF image.
+    Returns the primary outputs, shape [n_outputs, batch].
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rf_depth, batch = x.shape
+    assert rf_depth == RF_DEPTH
+    bt = min(block_batch, _round_up(batch, 128))
+    padded = _round_up(batch, bt)
+    if padded != batch:
+        x = jnp.pad(x, ((0, 0), (0, padded - batch)))
+    rf = tmfu_pipeline_rf(ctx.op, ctx.src_a, ctx.src_b,
+                          _imm_to_i32(ctx.imm), x,
+                          block_batch=bt, interpret=interpret)
+    return rf[ctx.out_idx, :batch]
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m

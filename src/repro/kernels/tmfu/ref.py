@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the TMFU pipeline kernel.
+
+Executes the encoded overlay context with plain Python loops over stages and
+instruction slots — bit-identical semantics to the hardware model: every
+instruction result streams to slot *i* of the next stage's register file.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dfg import Op
+
+
+def _apply(opc: int, va, vb, imm, dtype):
+    o = Op(int(opc))
+    if o in (Op.BYP, Op.OUT):
+        return va
+    if o == Op.ADD:
+        return va + vb
+    if o == Op.SUB:
+        return va - vb
+    if o == Op.MUL:
+        return va * vb
+    if o == Op.ADDC:
+        return va + imm
+    if o == Op.SUBC:
+        return va - imm
+    if o == Op.RSUBC:
+        return imm - va
+    if o == Op.MULC:
+        return va * imm
+    if o == Op.SQR:
+        return va * va
+    if o == Op.MAX:
+        return jnp.maximum(va, vb)
+    if o == Op.MIN:
+        return jnp.minimum(va, vb)
+    if o == Op.ABS:
+        return jnp.abs(va)
+    if o == Op.NEG:
+        return -va
+    if o in (Op.AND, Op.OR, Op.XOR):
+        fn = {Op.AND: jnp.bitwise_and, Op.OR: jnp.bitwise_or,
+              Op.XOR: jnp.bitwise_xor}[o]
+        if jnp.issubdtype(dtype, jnp.floating):
+            it = jnp.int32 if dtype.itemsize == 4 else jnp.int16
+            ia = jax.lax.bitcast_convert_type(va, it)
+            ib = jax.lax.bitcast_convert_type(vb, it)
+            return jax.lax.bitcast_convert_type(fn(ia, ib), dtype)
+        return fn(va, vb)
+    if o == Op.NOP:
+        return jnp.zeros_like(va)
+    raise ValueError(f"bad opcode {opc}")
+
+
+def tmfu_ref(op: np.ndarray, src_a: np.ndarray, src_b: np.ndarray,
+             imm: np.ndarray, x: jax.Array) -> jax.Array:
+    """Reference: x [RF_DEPTH, batch] -> final RF [RF_DEPTH, batch]."""
+    S, I = op.shape
+    rf = jnp.asarray(x)
+    dtype = rf.dtype
+    for s in range(S):
+        outs = []
+        for i in range(I):
+            va = rf[int(src_a[s, i])]
+            vb = rf[int(src_b[s, i])]
+            outs.append(_apply(op[s, i], va, vb,
+                               jnp.asarray(imm[s, i], dtype), dtype))
+        rf = jnp.stack(outs)
+    return rf

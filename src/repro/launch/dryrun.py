@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces artifacts/dryrun/<arch>_<shape>_<mesh>.json:
+  * memory_analysis (per-device bytes),
+  * cost_analysis (HLO FLOPs / bytes accessed),
+  * per-collective wire bytes parsed from the post-SPMD optimized HLO,
+  * the three roofline terms (compute / memory / collective seconds) and
+    MODEL_FLOPS = 6 N_active D (train) or 2 N_active D (serve).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp                              # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCHS, SHAPES, get_config,       # noqa: E402
+                           skip_reason)
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.models import model as M                  # noqa: E402
+from repro.runtime import optim as O                 # noqa: E402
+from repro.runtime import sharding as S              # noqa: E402
+from repro.runtime import steps as St                # noqa: E402
+
+# ------------------------------------------------------- hardware constants
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link ICI
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4,
+                "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str):
+    """Per-device wire bytes per collective (ring model)."""
+    out = []
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, dtype, dims, kind = m.groups()
+        size = _shape_bytes(dtype, dims)
+        # group size
+        g = 0
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).strip("{}").split(","))
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                g = int(im.group(2))
+        g = max(g, 2)
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2 * size * frac           # ring: reduce-scatter+all-gather
+        elif kind == "all-gather":
+            wire = size * frac               # result is the gathered buffer
+        elif kind == "reduce-scatter":
+            wire = size * g * frac           # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:                                # collective-permute
+            wire = size
+        out.append({"kind": kind, "dtype": dtype, "bytes": size,
+                    "group": g, "wire_bytes": wire})
+    return out
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(arch: str, shape: str, spatial: bool = False,
+                remat: str = "full"):
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    import dataclasses
+    cfg = get_config(arch)
+    if spatial:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if remat != "full":
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    seq, gbatch, kind = SHAPES[shape]
+    sds = jax.ShapeDtypeStruct
+    batch = {}
+    if kind == "train":
+        batch["tokens"] = sds((gbatch, seq), jnp.int32)
+        if cfg.vision_tokens:
+            batch["tokens"] = sds((gbatch, seq - cfg.vision_tokens),
+                                  jnp.int32)
+            batch["vision_embeds"] = sds(
+                (gbatch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder is not None:
+            batch["frame_embeds"] = sds((gbatch, seq, cfg.d_model),
+                                        jnp.bfloat16)
+    elif kind == "prefill":
+        batch["tokens"] = sds((gbatch, seq), jnp.int32)
+        if cfg.vision_tokens:
+            batch["tokens"] = sds((gbatch, seq - cfg.vision_tokens),
+                                  jnp.int32)
+            batch["vision_embeds"] = sds(
+                (gbatch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder is not None:
+            batch["frame_embeds"] = sds((gbatch, seq, cfg.d_model),
+                                        jnp.bfloat16)
+    else:  # decode
+        batch["tokens"] = sds((gbatch, 1), jnp.int32)
+    return cfg, batch, (seq, gbatch, kind)
+
+
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape: str, mesh, mesh_name: str,
+               spatial: bool = False, layout: str = "2d",
+               mixed: bool = False, remat: str = "full"):
+    cfg, batch_sds, (seq, gbatch, kind) = input_specs(arch, shape, spatial,
+                                                      remat)
+    from repro.models import layers as L
+    L.set_weight_gather(layout == "fsdp")
+    ax = S.for_mesh(mesh, layout)
+    params_sds = jax.eval_shape(
+        lambda k: M.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if mixed:
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            params_sds)
+    pspec = S.sanitize(S.param_shardings(cfg, mesh, ax), params_sds, mesh)
+    p_shard = S.to_named(pspec, mesh)
+    bspec_all = S.batch_shardings(cfg, mesh, gbatch, kind, ax)
+    bspec = {k: bspec_all[k] for k in batch_sds}
+    b_shard = S.to_named(S.sanitize(bspec, batch_sds, mesh), mesh)
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            oc = O.OptConfig()
+            step = St.make_train_step(cfg, oc, mixed=mixed)
+            if mixed:
+                opt_sds = jax.eval_shape(
+                    lambda p: O.init_opt_mixed(p), params_sds)
+                o_shard = S.to_named(
+                    {"m": pspec, "v": pspec, "master": pspec,
+                     "count": P()}, mesh)
+            else:
+                opt_sds = jax.eval_shape(
+                    lambda p: O.init_opt(p), params_sds)
+                o_shard = S.to_named(
+                    {"m": pspec, "v": pspec, "count": P()}, mesh)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif kind == "prefill":
+            step = St.make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            step = St.make_decode_step(cfg)
+            cache_sds = jax.eval_shape(
+                lambda: M.init_caches(cfg, gbatch, seq,
+                                      mem_len=seq if cfg.encoder else 0))
+            c_shard = S.to_named(
+                S.sanitize(S.cache_shardings(cfg, mesh, gbatch, ax),
+                           cache_sds, mesh), mesh)
+            tok_sds = jax.ShapeDtypeStruct((gbatch, 1), jnp.int32)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard,
+                              NamedSharding(mesh, P(ax.batch if gbatch > 1
+                                                    else None, None)),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds, pos_sds)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    L.set_weight_gather(False)
+    return cfg, compiled, (seq, gbatch, kind), t_lower, t_compile
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, outdir: str,
+             spatial: bool = False, layout: str = "2d",
+             mixed: bool = False, remat: str = "full"):
+    reason = skip_reason(arch, shape)
+    variant = ("" if layout == "2d" else f"_{layout}") + \
+        ("_mixed" if mixed else "") + \
+        ("" if remat == "full" else f"_remat-{remat}")
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "mode": "spatial" if spatial else "tm",
+           "layout": layout, "mixed": mixed, "remat": remat}
+    fname = os.path.join(
+        outdir, f"{arch}_{shape}_{mesh_name}{variant}.json".replace("/", "-"))
+    if reason:
+        rec["skipped"] = reason
+        _write(fname, rec)
+        print(f"[skip] {arch} x {shape} ({mesh_name}): {reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh.size
+    try:
+        cfg, compiled, (seq, gbatch, kind), t_lo, t_co = lower_cell(
+            arch, shape, mesh, mesh_name, spatial, layout, mixed, remat)
+    except Exception as e:  # a failure here is a bug in the system
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        _write(fname, rec)
+        print(f"[FAIL] {arch} x {shape} ({mesh_name}): {rec['error']}")
+        return rec
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float))}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+    colls = parse_collectives(compiled.as_text())
+    agg = {}
+    for c in colls:
+        a = agg.setdefault(c["kind"], {"count": 0, "wire_bytes": 0.0})
+        a["count"] += 1
+        a["wire_bytes"] += c["wire_bytes"]
+    rec["collectives"] = agg
+    coll_bytes = sum(a["wire_bytes"] for a in agg.values())
+
+    hlo_flops = rec.get("cost", {}).get("flops", 0.0)
+    hlo_bytes = rec.get("cost", {}).get("bytes accessed", 0.0)
+    # model FLOPs: 6 N D train, 2 N D serve (active params for MoE)
+    n_active = cfg.active_param_count()
+    tokens = gbatch * (seq if kind != "decode" else 1)
+    model_flops = (6 if kind == "train" else 2) * n_active * tokens
+    rec["roofline"] = {
+        "chips": n_chips,
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "collective_wire_bytes_per_device": coll_bytes,
+        "t_compute_s": hlo_flops / PEAK_FLOPS,
+        "t_memory_s": hlo_bytes / HBM_BW,
+        "t_collective_s": coll_bytes / LINK_BW,
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / hlo_flops
+        if hlo_flops else None,
+    }
+    terms = {k: rec["roofline"][f"t_{k}_s"]
+             for k in ("compute", "memory", "collective")}
+    rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    rec["timing"] = {"lower_s": t_lo, "compile_s": t_co}
+    _write(fname, rec)
+    print(f"[ok] {arch} x {shape} ({mesh_name}): "
+          f"compute {terms['compute']:.4f}s memory {terms['memory']:.4f}s "
+          f"coll {terms['collective']:.4f}s -> "
+          f"{rec['roofline']['bottleneck']}  (compile {t_co:.0f}s)")
+    return rec
+
+
+def _write(fname, rec):
+    os.makedirs(os.path.dirname(fname), exist_ok=True)
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--spatial", action="store_true",
+                    help="unroll layer stacks (exact HLO cost accounting; "
+                         "also the paper's SCFU-analogue datapoint)")
+    ap.add_argument("--layout", default="2d", choices=["2d", "fsdp"])
+    ap.add_argument("--mixed", action="store_true",
+                    help="bf16 params + f32 master in opt state")
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    args = ap.parse_args()
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                fname = os.path.join(
+                    args.out, f"{arch}_{shape}_{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    try:
+                        with open(fname) as f:
+                            if "error" not in json.load(f):
+                                continue
+                    except Exception:
+                        pass
+                rec = run_cell(arch, shape, mesh_name, args.out,
+                               spatial=args.spatial, layout=args.layout,
+                               mixed=args.mixed, remat=args.remat)
+                failures += 1 if "error" in rec else 0
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips ('data','model').  Multi-pod: 2 pods
+x 256 = 512 chips ('pod','data','model'); the pod axis carries only
+data-parallel traffic (DCN-friendly).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_devices(devices, model_parallel: int = 16):
+    """Elastic re-mesh: build the largest (data, model) mesh from a live
+    device list (used by distributed.elastic on simulated failures)."""
+    import numpy as np
+    n = len(devices)
+    model = model_parallel
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"))

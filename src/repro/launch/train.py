@@ -1,0 +1,150 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch deepseek-7b --smoke --steps 20
+  python -m repro.launch.train --arch mamba2-2.7b --smoke --steps 50 \
+      --ckpt-dir /tmp/ck --ckpt-every 10 --simulate-failure-at 30
+
+On real hardware this runs under the production mesh; on CPU it uses the
+host's devices (optionally --force-devices N for a simulated mesh).
+Features exercised: sharded params/opt, remat'd scanned stacks, AdamW,
+async checkpointing, deterministic resumable data, simulated-failure
+restart (elastic re-mesh), optional int8 gradient compression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--simulate-failure-at", type=int, default=None,
+                    help="drop devices + re-mesh + restore at this step")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from repro.distributed import checkpoint as C
+    from repro.distributed.elastic import remesh, reshard_tree
+    from repro.models import init_params
+    from repro.runtime import optim as O
+    from repro.runtime import sharding as S
+    from repro.runtime.steps import make_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    devices = list(jax.devices())
+    mesh = remesh(devices, model_parallel=min(
+        len(devices), 16 if not args.smoke else 1))
+    ax = S.for_mesh(mesh)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"arch: {cfg.name} params~{cfg.param_count():,}")
+
+    oc = O.OptConfig(lr=args.lr, total_steps=max(args.steps, 10),
+                     warmup_steps=max(2, args.steps // 20))
+    dc = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                    vocab=cfg.vocab)
+    corpus = SyntheticCorpus(dc)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = O.init_opt(params)
+    start_step = 0
+    ckpt = C.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir and C.list_steps(args.ckpt_dir):
+        (params, opt_state), start_step, extra = C.restore(
+            args.ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start_step}")
+
+    pspec = S.sanitize(S.param_shardings(cfg, mesh, ax),
+                       jax.eval_shape(lambda: params), mesh)
+    params = reshard_tree(params, pspec, mesh)
+    opt_state = {"m": reshard_tree(opt_state["m"], pspec, mesh),
+                 "v": reshard_tree(opt_state["v"], pspec, mesh),
+                 "count": opt_state["count"]}
+
+    step_fn = jax.jit(make_train_step(cfg, oc,
+                                      compress_grads=args.compress_grads),
+                      donate_argnums=(0, 1))
+
+    tokens_per_step = args.batch * args.seq
+    t_hist = []
+    with mesh:
+        for step in range(start_step, args.steps):
+            if args.simulate_failure_at is not None \
+                    and step == args.simulate_failure_at:
+                print(f"[elastic] simulating failure at step {step}: "
+                      f"dropping half the devices + restoring checkpoint")
+                assert ckpt is not None, "--ckpt-dir required"
+                ckpt.wait()
+                mesh = remesh(devices[: max(1, len(devices) // 2)],
+                              model_parallel=1)
+                ax = S.for_mesh(mesh)
+                (params, opt_state), rstep, extra = C.restore(
+                    args.ckpt_dir, jax.eval_shape(lambda: (params,
+                                                           opt_state)))
+                step = rstep
+                pspec = S.sanitize(S.param_shardings(cfg, mesh, ax),
+                                   jax.eval_shape(lambda: params), mesh)
+                params = reshard_tree(params, pspec, mesh)
+                opt_state = {"m": reshard_tree(opt_state["m"], pspec, mesh),
+                             "v": reshard_tree(opt_state["v"], pspec, mesh),
+                             "count": opt_state["count"]}
+                step_fn = jax.jit(make_train_step(
+                    cfg, oc, compress_grads=args.compress_grads),
+                    donate_argnums=(0, 1))
+                args.simulate_failure_at = None
+            batch = corpus.batch(step)
+            if cfg.vision_tokens:
+                batch["vision_embeds"] = jnp.zeros(
+                    (dc.local_batch, cfg.vision_tokens, cfg.d_model),
+                    jnp.bfloat16)
+            if cfg.encoder is not None:
+                batch["frame_embeds"] = jnp.zeros(
+                    (dc.local_batch, args.seq, cfg.d_model), jnp.bfloat16)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            t_hist.append(dt)
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"{tokens_per_step / dt:,.0f} tok/s")
+            if not np.isfinite(loss):
+                print("NaN/inf loss — aborting")
+                return 1
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(step + 1, (params, opt_state),
+                                extra=corpus.cursor(step + 1))
+    if ckpt:
+        ckpt.save_async(args.steps, (params, opt_state),
+                        extra=corpus.cursor(args.steps))
+        ckpt.wait()
+    med = float(np.median(t_hist)) if t_hist else 0.0
+    print(f"done: median step {med * 1e3:.1f} ms, "
+          f"{tokens_per_step / med:,.0f} tok/s" if med else "done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

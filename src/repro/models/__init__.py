@@ -1,0 +1,9 @@
+from repro.models.blocks import BlockSpec, StackSpec
+from repro.models.model import (EncoderSpec, ModelConfig, decode_step,
+                                dense_stacks, forward, init_caches,
+                                init_params, loss_fn, prefill)
+from repro.models.ssm import SSMDims
+
+__all__ = ["BlockSpec", "StackSpec", "EncoderSpec", "ModelConfig",
+           "SSMDims", "dense_stacks", "forward", "init_params", "loss_fn",
+           "prefill", "decode_step", "init_caches"]

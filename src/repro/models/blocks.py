@@ -1,0 +1,301 @@
+"""Residual blocks + stack runner.
+
+A model is an ordered list of *stacks*; each stack applies its tuple of
+``BlockSpec``s ``count`` times with params stacked on a leading axis.
+
+The stack runner realizes the paper's central axis:
+
+  * ``tm`` (time-multiplexed, default) — ``lax.scan`` over the stacked
+    params: ONE compiled block body re-issued over the layer stream, the
+    direct analogue of the paper's FU executing its stage's instruction
+    list (tiny 'instruction memory' = small HLO).
+  * ``spatial`` — a Python loop unrolling every layer into the program,
+    the SCFU-SCN analogue (one FU per op; big HLO, maximal scheduling
+    freedom).
+
+``shared=True`` blocks (zamba2's shared attention) keep ONE param set that
+is re-applied at every scan step — the paper's time-multiplexing taken to
+the weight level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (AttnDims, attention_apply, attention_decode,
+                                 init_attention, init_mlp, init_moe,
+                                 init_norm, linear, mlp_apply, moe_apply,
+                                 rms_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str                    # "attn" | "mamba"
+    window: int | None = None    # sliding-window size (attn)
+    moe: bool = False
+    shared: bool = False         # params shared across scan steps (zamba2)
+    cross: bool = False          # + cross-attention sublayer (whisper dec)
+    causal: bool = True
+    use_rope: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    count: int
+    blocks: tuple[BlockSpec, ...]
+
+
+# ----------------------------------------------------------- param builders
+def init_block(key, cfg, spec: BlockSpec):
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    ks = jax.random.split(key, 8)
+    if spec.kind == "mamba":
+        return {"ln": init_norm(ks[0], cfg.d_model),
+                "mixer": ssm_mod.init_mamba2(ks[1], cfg.ssm)}
+    p = {"ln1": init_norm(ks[0], cfg.d_model),
+         "attn": init_attention(ks[1], cfg.d_model, dims),
+         "ln2": init_norm(ks[2], cfg.d_model)}
+    if spec.moe:
+        p["moe"] = init_moe(ks[3], cfg.d_model, cfg.expert_d_ff,
+                            cfg.n_experts,
+                            n_shared=cfg.n_shared_experts,
+                            shared_d_ff=cfg.shared_expert_d_ff)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    if spec.cross:
+        p["lnx"] = init_norm(ks[4], cfg.d_model)
+        p["xattn"] = init_attention(ks[5], cfg.d_model, dims)
+    return p
+
+
+def init_stack(key, cfg, stack: StackSpec):
+    """Params for one stack: leaves [count, ...] (shared blocks unstacked)."""
+    out = []
+    for j, spec in enumerate(stack.blocks):
+        kj = jax.random.fold_in(key, j)
+        if spec.shared:
+            out.append(init_block(kj, cfg, spec))
+        else:
+            ks = jax.random.split(kj, stack.count)
+            per = [init_block(k, cfg, spec) for k in ks]
+            out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return out
+
+
+# ------------------------------------------------------------- cache builders
+def init_block_cache(cfg, spec: BlockSpec, batch: int, cache_len: int,
+                     mem_len: int = 0, dtype=jnp.bfloat16):
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    if spec.kind == "mamba":
+        d = cfg.ssm
+        conv_ch = d.d_inner + 2 * d.n_groups * d.d_state
+        return {
+            "conv": jnp.zeros((batch, d.d_conv - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((batch, d.n_heads, d.d_state, d.head_dim),
+                             jnp.float32),
+        }
+    S = min(cache_len, spec.window) if spec.window else cache_len
+    c = {"k": jnp.zeros((batch, S, dims.n_kv_heads, dims.head_dim), dtype),
+         "v": jnp.zeros((batch, S, dims.n_kv_heads, dims.head_dim), dtype)}
+    if spec.cross:
+        c["xk"] = jnp.zeros((batch, mem_len, dims.n_kv_heads,
+                             dims.head_dim), dtype)
+        c["xv"] = jnp.zeros((batch, mem_len, dims.n_kv_heads,
+                             dims.head_dim), dtype)
+    return c
+
+
+def init_stack_cache(cfg, stack: StackSpec, batch, cache_len, mem_len=0,
+                     dtype=jnp.bfloat16):
+    return [jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (stack.count,) + x.shape),
+        init_block_cache(cfg, spec, batch, cache_len, mem_len, dtype))
+        for spec in stack.blocks]
+
+
+# --------------------------------------------------------------- block apply
+def block_apply(cfg, spec: BlockSpec, p, h, positions, memory=None,
+                mem_positions=None):
+    """Full-sequence (train / prefill) application.  Returns (h, kv) where
+    kv = (k_full, v_full [, xk, xv]) streams for cache construction."""
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    if spec.kind == "mamba":
+        return h + ssm_mod.mamba2_apply(p["mixer"], rms_norm(p["ln"], h),
+                                        dims=cfg.ssm), None
+    a = attention_apply(p["attn"], rms_norm(p["ln1"], h), dims=dims,
+                        positions=positions, causal=spec.causal,
+                        window=spec.window, rope_theta=cfg.rope_theta,
+                        use_rope=spec.use_rope)
+    h = h + a
+    if spec.cross:
+        x = attention_apply(p["xattn"], rms_norm(p["lnx"], h), dims=dims,
+                            positions=positions, causal=False, window=None,
+                            rope_theta=cfg.rope_theta, use_rope=False,
+                            kv=memory, kv_positions=mem_positions)
+        h = h + x
+    inner = rms_norm(p["ln2"], h)
+    if spec.moe:
+        out, aux = moe_apply(p["moe"], inner, top_k=cfg.top_k)
+    else:
+        out, aux = mlp_apply(p["mlp"], inner), 0.0
+    return h + out, aux
+
+
+def block_decode(cfg, spec: BlockSpec, p, h, cache, pos):
+    """Single-token decode; cache is this block's dict (unstacked)."""
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    if spec.kind == "mamba":
+        y, conv, ssm_st = ssm_mod.mamba2_decode(
+            p["mixer"], rms_norm(p["ln"], h), cache["conv"], cache["ssm"],
+            dims=cfg.ssm)
+        return h + y, {"conv": conv, "ssm": ssm_st}
+    a, ck, cv = attention_decode(p["attn"], rms_norm(p["ln1"], h),
+                                 cache["k"], cache["v"], pos, dims=dims,
+                                 window=spec.window,
+                                 rope_theta=cfg.rope_theta,
+                                 use_rope=spec.use_rope)
+    h = h + a
+    new_cache = dict(cache, k=ck, v=cv)
+    if spec.cross:
+        # cross K/V were filled at prefill; attend over all memory slots
+        B = h.shape[0]
+        S_mem = cache["xk"].shape[1]
+        q = linear(p["xattn"]["wq"], rms_norm(p["lnx"], h)).reshape(
+            B, 1, dims.n_kv_heads, dims.n_heads // dims.n_kv_heads,
+            dims.head_dim)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q,
+                            cache["xk"].astype(q.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = logits * dims.head_dim ** -0.5
+        probs = jax.nn.softmax(logits, -1).astype(h.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                       cache["xv"].astype(h.dtype))
+        o = o.reshape(B, 1, dims.n_heads * dims.head_dim)
+        h = h + linear(p["xattn"]["wo"], o)
+    inner = rms_norm(p["ln2"], h)
+    if spec.moe:
+        out, _ = moe_apply(p["moe"], inner, top_k=cfg.top_k)
+    else:
+        out = mlp_apply(p["mlp"], inner)
+    return h + out, new_cache
+
+
+def block_fill_cache(cfg, spec: BlockSpec, p, h_pre, cache, memory=None):
+    """Populate a block's KV cache from a full prefill pass.
+
+    h_pre is the block input; recomputes k/v projections (cheap vs attn)."""
+    if spec.kind == "mamba":
+        conv_st, ssm_st = ssm_mod.mamba2_states(
+            p["mixer"], rms_norm(p["ln"], h_pre), dims=cfg.ssm)
+        return dict(cache, conv=conv_st.astype(cache["conv"].dtype),
+                    ssm=ssm_st)
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    from repro.models.layers import apply_rope
+    B, S, _ = h_pre.shape
+    x = rms_norm(p["ln1"], h_pre)
+    k = linear(p["attn"]["wk"], x).reshape(B, S, dims.n_kv_heads,
+                                           dims.head_dim)
+    v = linear(p["attn"]["wv"], x).reshape(B, S, dims.n_kv_heads,
+                                           dims.head_dim)
+    if spec.use_rope:
+        k = apply_rope(k, jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+                       cfg.rope_theta)
+    # ring layout: absolute position p lives at slot p % W (decode assumes it)
+    W = cache["k"].shape[1]
+    if S <= W:
+        new_k = jnp.zeros_like(cache["k"]).at[:, :S].set(
+            k.astype(cache["k"].dtype))
+        new_v = jnp.zeros_like(cache["v"]).at[:, :S].set(
+            v.astype(cache["v"].dtype))
+    else:
+        import numpy as np
+        slots = jnp.asarray(np.arange(S - W, S) % W)
+        new_k = jnp.zeros_like(cache["k"]).at[:, slots].set(
+            k[:, -W:].astype(cache["k"].dtype))
+        new_v = jnp.zeros_like(cache["v"]).at[:, slots].set(
+            v[:, -W:].astype(cache["v"].dtype))
+    new = dict(cache, k=new_k, v=new_v)
+    if spec.cross and memory is not None:
+        Sm = memory.shape[1]
+        xm = memory
+        xk = linear(p["xattn"]["wk"], xm).reshape(B, Sm, dims.n_kv_heads,
+                                                  dims.head_dim)
+        xv = linear(p["xattn"]["wv"], xm).reshape(B, Sm, dims.n_kv_heads,
+                                                  dims.head_dim)
+        new["xk"] = xk.astype(cache["xk"].dtype)
+        new["xv"] = xv.astype(cache["xv"].dtype)
+    return new
+
+
+# --------------------------------------------------------------- stack runner
+def run_stack(cfg, stack: StackSpec, sp, h, positions, *, mode="train",
+              memory=None, mem_positions=None, caches=None, pos=None):
+    """Apply one stack.  mode: train|prefill|decode.
+
+    Returns (h, aux_sum, new_caches).  In tm mode the body is scanned; in
+    spatial mode it is unrolled.  Shared-block params ride as closures.
+    """
+    tm = getattr(cfg, "scan_layers", True)
+    specs = stack.blocks
+    shared_params = [sp[j] if s.shared else None
+                     for j, s in enumerate(specs)]
+
+    def step(h, per_layer):
+        params_j, cache_j = per_layer
+        aux_total = 0.0
+        new_caches = []
+        for j, spec in enumerate(specs):
+            pj = shared_params[j] if spec.shared else params_j[j]
+            if mode == "decode":
+                h_new, c_new = block_decode(cfg, spec, pj, h,
+                                            cache_j[j], pos)
+                new_caches.append(c_new)
+            else:
+                h_pre = h
+                h_new, aux = block_apply(cfg, spec, pj, h, positions,
+                                         memory, mem_positions)
+                if aux is not None:
+                    aux_total = aux_total + aux
+                if mode == "prefill":
+                    new_caches.append(block_fill_cache(
+                        cfg, spec, pj, h_pre, cache_j[j], memory))
+            h = h_new
+        return h, (aux_total, new_caches)
+
+    # assemble per-layer xs: params (stacked, shared -> dummy zeros-free) +
+    # caches (stacked)
+    params_xs = [jnp.zeros((stack.count,)) if s.shared else sp[j]
+                 for j, s in enumerate(specs)]
+    cache_stacked = caches if caches is not None else [{} for _ in specs]
+
+    if tm:
+        body = step
+        if mode == "train":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if getattr(cfg, "remat_policy", "full") == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(step, policy=policy)
+        h, (aux, new_caches) = jax.lax.scan(
+            body, h, (params_xs, cache_stacked))
+        aux = jnp.sum(aux) if hasattr(aux, "shape") else aux
+        return h, aux, new_caches
+    # spatial: unroll
+    aux_total = 0.0
+    outs = []
+    for i in range(stack.count):
+        params_i = jax.tree.map(lambda x: x[i], params_xs)
+        cache_i = jax.tree.map(lambda x: x[i], cache_stacked)
+        h, (aux, c_new) = step(h, (params_i, cache_i))
+        aux_total += aux
+        outs.append(c_new)
+    if outs and outs[0]:
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        new_caches = cache_stacked
+    return h, aux_total, new_caches

@@ -1,0 +1,343 @@
+"""Model substrate layers: norms, RoPE, GQA attention, MLP, MoE.
+
+Functional style: ``init_*`` returns a param pytree; ``*_apply`` consumes it.
+Compute dtype is bf16 (params stored f32, cast at use); softmax and
+reductions run in f32.  Attention uses an online-softmax (flash-style)
+chunked path for long sequences so activation memory stays bounded, with a
+window-limited variant that only visits the kv chunks a sliding-window
+layer can actually see (keeps HLO FLOPs honest for local-attention archs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+#: when True, weights are explicitly all-gathered (replicated constraint)
+#: AFTER the bf16 cast and before use — forces XLA into FSDP-style
+#: weight-gathering (bf16 on the wire) instead of activation partial-sums.
+_WEIGHT_GATHER = False
+
+
+def set_weight_gather(on: bool) -> None:
+    global _WEIGHT_GATHER
+    _WEIGHT_GATHER = bool(on)
+
+
+def maybe_gather(w):
+    if _WEIGHT_GATHER:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(w, P(*([None] * w.ndim)))
+    return w
+
+
+# ------------------------------------------------------------------- basics
+
+
+def init_linear(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def linear(p, x):
+    return x @ maybe_gather(p["w"].astype(x.dtype))
+
+
+def init_norm(_key, d):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * p["g"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32)[..., None, :] \
+        * freqs  # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def init_attention(key, d_model, dims: AttnDims):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": init_linear(kq, d_model, h * hd),
+        "wk": init_linear(kk, d_model, kh * hd),
+        "wv": init_linear(kv, d_model, kh * hd),
+        "wo": init_linear(ko, h * hd, d_model, scale=(h * hd) ** -0.5),
+    }
+
+
+def _mask(q_pos, k_pos, causal, window):
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                 jnp.bool_)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+def _sdpa(q, k, v, q_pos, k_pos, causal, window):
+    """Direct attention on small blocks. q [B,Sq,KH,G,hd], k/v [B,Sk,KH,hd]."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _mask(q_pos, k_pos, causal, window)  # [B?,Sq,Sk] broadcast
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _flash(q, k, v, q_pos, k_pos, causal, window, kv_chunk=1024):
+    """Online-softmax over kv chunks. Shapes as _sdpa; returns [B,Sq,KH,G,hd]."""
+    B, Sq, KH, G, hd = q.shape
+    Sk = k.shape[1]
+    nkc = -(-Sk // kv_chunk)
+    pad = nkc * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    scale = hd ** -0.5
+    kc = k.reshape(B, nkc, kv_chunk, KH, hd)
+    vc = v.reshape(B, nkc, kv_chunk, KH, hd)
+    pc = k_pos.reshape(B, nkc, kv_chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs  # [B,ck,KH,hd], [B,ck]
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        msk = _mask(q_pos, pb, causal, window)
+        logits = jnp.where(msk[:, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Sq, hd), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         pc.transpose(1, 0, 2)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # [B,Sq,KH,G,hd]
+
+
+def _flash_windowed(q, k, v, q_pos, k_pos, causal, window, q_chunk=512):
+    """Sliding-window attention visiting only reachable kv (causal).
+
+    Scans q chunks; for each, slices the kv span [start, start+span) where
+    span = window + q_chunk.  Keeps FLOPs ~O(S*window) instead of O(S^2).
+    """
+    B, Sq, KH, G, hd = q.shape
+    Sk = k.shape[1]
+    span = window + q_chunk
+    nqc = -(-Sq // q_chunk)
+    padq = nqc * q_chunk - Sq
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, padq)), constant_values=2 ** 30)
+    qc = q.reshape(B, nqc, q_chunk, KH, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpc = q_pos.reshape(B, nqc, q_chunk).transpose(1, 0, 2)
+    kpad = jnp.pad(k, ((0, 0), (0, span), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (0, span), (0, 0), (0, 0)))
+    kp_pad = jnp.pad(k_pos, ((0, 0), (0, span)), constant_values=2 ** 30)
+
+    def body(c, xs):
+        qb, qpb = xs
+        start = jnp.maximum(c * q_chunk - window, 0)
+        kb = jax.lax.dynamic_slice_in_dim(kpad, start, span, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vpad, start, span, 1)
+        pb = jax.lax.dynamic_slice_in_dim(kp_pad, start, span, 1)
+        out = _sdpa(qb, kb, vb, qpb, pb, causal, window)
+        return c + 1, out
+
+    _, outs = jax.lax.scan(body, 0, (qc, qpc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+        B, nqc * q_chunk, KH, G, hd)
+    return out[:, :Sq]
+
+
+def attention_apply(p, x, *, dims: AttnDims, positions, causal=True,
+                    window=None, rope_theta=10000.0, kv=None, kv_positions=None,
+                    use_rope=True, flash_threshold=2048):
+    """Self- or cross-attention.  x [B,S,D]; kv (xk_src) for cross-attn."""
+    B, S, _ = x.shape
+    h, kh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    g = h // kh
+    q = linear(p["wq"], x).reshape(B, S, kh, g, hd)
+    src = x if kv is None else kv
+    Sk = src.shape[1]
+    k = linear(p["wk"], src).reshape(B, Sk, kh, hd)
+    v = linear(p["wv"], src).reshape(B, Sk, kh, hd)
+    kpos = positions if kv is None else kv_positions
+    if use_rope:
+        q = apply_rope(q.reshape(B, S, kh * g, hd), positions,
+                       rope_theta).reshape(B, S, kh, g, hd)
+        k = apply_rope(k, kpos, rope_theta)
+    if window is not None and causal and Sk > flash_threshold:
+        out = _flash_windowed(q, k, v, positions, kpos, causal, window)
+    elif Sk > flash_threshold:
+        out = _flash(q, k, v, positions, kpos, causal, window)
+    else:
+        out = _sdpa(q, k, v, positions, kpos, causal, window)
+    out = out.reshape(B, S, h * hd)
+    return linear(p["wo"], out)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, *, dims: AttnDims,
+                     window=None, rope_theta=10000.0, use_rope=True):
+    """Single-token decode with in-place cache append.
+
+    x [B,1,D]; cache_k/v [B,S,KH,hd]; pos [] scalar write position.
+    Returns (out [B,1,D], cache_k, cache_v).
+    """
+    B, _, _ = x.shape
+    h, kh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    g = h // kh
+    S = cache_k.shape[1]
+    q = linear(p["wq"], x).reshape(B, 1, kh, g, hd)
+    k_new = linear(p["wk"], x).reshape(B, 1, kh, hd)
+    v_new = linear(p["wv"], x).reshape(B, 1, kh, hd)
+    posv = jnp.full((B, 1), pos)
+    if use_rope:
+        q = apply_rope(q.reshape(B, 1, h, hd), posv,
+                       rope_theta).reshape(B, 1, kh, g, hd)
+        k_new = apply_rope(k_new, posv, rope_theta)
+    write_at = pos % S  # ring buffer (sliding-window caches wrap)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), write_at, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), write_at, axis=1)
+    # absolute positions of cache slots (ring-aware)
+    slot = jnp.arange(S)
+    wraps = (pos // S)
+    k_pos = jnp.where(slot <= write_at, wraps * S + slot,
+                      (wraps - 1) * S + slot)
+    k_pos = jnp.broadcast_to(k_pos[None], (B, S))
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, cache_k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    valid = (k_pos <= pos) & (k_pos >= 0)
+    if window is not None:
+        valid &= k_pos > pos - window
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cache_v.astype(x.dtype))
+    out = out.reshape(B, 1, h * hd)
+    return linear(p["wo"], out), cache_k, cache_v
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model, d_ff, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, d_model, d_ff),
+         "down": init_linear(k2, d_ff, d_model, scale=d_ff ** -0.5)}
+    if gated:
+        p["gate"] = init_linear(k3, d_model, d_ff)
+    return p
+
+
+def mlp_apply(p, x, act=jax.nn.silu):
+    up = linear(p["up"], x)
+    if "gate" in p:
+        up = up * act(linear(p["gate"], x))
+    else:
+        up = act(up)
+    return linear(p["down"], up)
+
+
+# ----------------------------------------------------------------------- MoE
+def init_moe(key, d_model, expert_d_ff, n_experts, n_shared=0,
+             shared_d_ff=None):
+    kr, ke, ks = jax.random.split(key, 3)
+    k1, k2, k3 = jax.random.split(ke, 3)
+    scale = d_model ** -0.5
+    p = {
+        "router": init_linear(kr, d_model, n_experts),
+        "w_up": jax.random.normal(
+            k1, (n_experts, d_model, expert_d_ff)) * scale,
+        "w_gate": jax.random.normal(
+            k2, (n_experts, d_model, expert_d_ff)) * scale,
+        "w_down": jax.random.normal(
+            k3, (n_experts, expert_d_ff, d_model)) * expert_d_ff ** -0.5,
+    }
+    if n_shared:
+        p["shared"] = init_mlp(ks, d_model,
+                               shared_d_ff or n_shared * expert_d_ff)
+    return p
+
+
+def moe_apply(p, x, *, top_k: int):
+    """Sorted-dispatch MoE (MegaBlocks-style) via lax.ragged_dot.
+
+    FLOPs are exactly T*k per-expert work — no dense all-expert compute,
+    no capacity padding.  Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    E = p["w_up"].shape[0]
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = linear(p["router"], xt).astype(jnp.float32)   # [T,E]
+    gates, eid = jax.lax.top_k(jax.nn.softmax(logits, -1), top_k)  # [T,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(eid[:, 0], E, dtype=jnp.float32), 0)
+    router_prob = jnp.mean(jax.nn.softmax(logits, -1), 0)
+    aux = E * jnp.sum(density * router_prob)
+
+    flat_e = eid.reshape(-1)                                # [T*k]
+    order = jnp.argsort(flat_e)
+    token_of = order // top_k
+    xs = xt[token_of]                                       # [T*k, D]
+    group_sizes = jnp.bincount(flat_e, length=E)
+    up = jax.lax.ragged_dot(xs, maybe_gather(p["w_up"].astype(xs.dtype)),
+                            group_sizes)
+    gate = jax.lax.ragged_dot(xs, maybe_gather(p["w_gate"].astype(xs.dtype)),
+                              group_sizes)
+    hidden = up * jax.nn.silu(gate)
+    out_s = jax.lax.ragged_dot(hidden,
+                               maybe_gather(p["w_down"].astype(xs.dtype)),
+                               group_sizes)                 # [T*k, D]
+    # unsort and combine with gate weights
+    w = gates.reshape(-1)[order].astype(out_s.dtype)        # sorted weights
+    combined = jnp.zeros((T, D), out_s.dtype).at[token_of].add(out_s * w[:, None])
+    if "shared" in p:
+        combined = combined + mlp_apply(p["shared"], xt)
+    return combined.reshape(B, S, D), aux

@@ -1,0 +1,245 @@
+"""Composable LM definition covering all assigned architecture families.
+
+A ``ModelConfig`` is a list of stacks (see blocks.py) + embedding/head and
+optional encoder (whisper) / vision-stub (internvl2) plumbing.  All models
+share one forward/prefill/decode implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as B
+from repro.models.blocks import BlockSpec, StackSpec
+from repro.models.layers import COMPUTE_DTYPE, init_norm, rms_norm
+from repro.models.ssm import SSMDims
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Whisper-style encoder: precomputed frame embeddings in, memory out."""
+    stacks: tuple[StackSpec, ...]
+    frame_dim: int            # stub frontend output dim (== d_model)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int
+    stacks: tuple[StackSpec, ...]
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_d_ff: int = 0
+    shared_expert_d_ff: int = 0
+    # SSM
+    ssm: Optional[SSMDims] = None
+    # enc-dec (audio)
+    encoder: Optional[EncoderSpec] = None
+    # VLM stub: number of precomputed patch-embedding tokens prepended
+    vision_tokens: int = 0
+    # execution mode: time-multiplexed (scan) vs spatial (unrolled)
+    scan_layers: bool = True
+    # sinusoidal absolute positions added to decoder embeddings (whisper)
+    use_abs_pos: bool = False
+    # remat policy for scanned stacks: 'full' recomputes everything
+    # (minimum memory), 'dots' saves matmul outputs (trades HBM for the
+    # recompute pass — §Perf iteration 5)
+    remat_policy: str = "full"
+    # attention family flags
+    full_attention: bool = True   # False => sub-quadratic (ssm/hybrid/local)
+    aux_loss_weight: float = 0.01
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.count * len(s.blocks) for s in self.stacks)
+
+    def param_count(self) -> int:
+        """Total params (analytic, from shapes)."""
+        shapes = jax.eval_shape(lambda k: init_params(self, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: top_k+shared experts only)."""
+        total = self.param_count()
+        if not self.n_experts:
+            return total
+        per_expert = 3 * self.d_model * self.expert_d_ff
+        n_moe = sum(s.count for s in self.stacks
+                    for b in s.blocks if b.moe)
+        inactive = n_moe * (self.n_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+def dense_stacks(n_layers: int, *, window_pattern=None, moe=False,
+                 causal=True, use_rope=True) -> tuple[StackSpec, ...]:
+    """Uniform dense/MoE stacks; window_pattern=(sizes...) cycles layers."""
+    if window_pattern is None:
+        return (StackSpec(n_layers, (BlockSpec("attn", moe=moe,
+                                               causal=causal,
+                                               use_rope=use_rope),)),)
+    P = len(window_pattern)
+    full, rem = divmod(n_layers, P)
+    sts = []
+    if full:
+        sts.append(StackSpec(full, tuple(
+            BlockSpec("attn", window=w, moe=moe) for w in window_pattern)))
+    if rem:
+        sts.append(StackSpec(1, tuple(
+            BlockSpec("attn", window=w, moe=moe)
+            for w in window_pattern[:rem])))
+    return tuple(sts)
+
+
+# ----------------------------------------------------------------- params
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6 + len(cfg.stacks))
+    p = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "head": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab),
+                                  jnp.float32) * cfg.d_model ** -0.5,
+        "final_norm": init_norm(ks[2], cfg.d_model),
+        "stacks": [B.init_stack(ks[6 + i], cfg, s)
+                   for i, s in enumerate(cfg.stacks)],
+    }
+    if cfg.encoder is not None:
+        p["enc_stacks"] = [B.init_stack(jax.random.fold_in(ks[3], i),
+                                        cfg, s)
+                           for i, s in enumerate(cfg.encoder.stacks)]
+        p["enc_norm"] = init_norm(ks[4], cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------- forward
+def _embed(cfg, params, tokens):
+    h = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    return h * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
+
+
+def _sinusoid(S, D, dtype):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, D, 2)[None, :] / D
+    ang = pos / (10000.0 ** dim)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], -1)
+    return jnp.asarray(emb, dtype)
+
+
+def encode(cfg, params, frame_embeds):
+    """Whisper encoder: frame_embeds [B,S,D] (stub frontend output)."""
+    h = frame_embeds.astype(COMPUTE_DTYPE) \
+        + _sinusoid(frame_embeds.shape[1], cfg.d_model, COMPUTE_DTYPE)[None]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1])[None],
+                                 h.shape[:2])
+    for sp, stack in zip(params["enc_stacks"], cfg.encoder.stacks):
+        h, _, _ = B.run_stack(cfg, stack, sp, h, positions, mode="train")
+    return rms_norm(params["enc_norm"], h)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra_embeds=None,
+            frame_embeds=None, mode="train", caches=None):
+    """Full-sequence pass.  tokens [B,S]; extra_embeds [B,Sv,D] (vision);
+    frame_embeds [B,Se,D] (audio encoder input).
+
+    Returns (logits [B,S_total,V], aux_loss, new_caches).
+    """
+    h = _embed(cfg, params, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    Bsz, S, _ = h.shape
+    if cfg.use_abs_pos:
+        h = h + _sinusoid(S, cfg.d_model, h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    memory, mem_pos = None, None
+    if cfg.encoder is not None:
+        memory = encode(cfg, params, frame_embeds)
+        mem_pos = jnp.broadcast_to(
+            jnp.arange(memory.shape[1])[None], memory.shape[:2])
+    aux_total = 0.0
+    new_caches = []
+    for i, (sp, stack) in enumerate(zip(params["stacks"], cfg.stacks)):
+        h, aux, c = B.run_stack(
+            cfg, stack, sp, h, positions, mode=mode, memory=memory,
+            mem_positions=mem_pos,
+            caches=None if caches is None else caches[i])
+        aux_total = aux_total + jnp.sum(aux)
+        new_caches.append(c)
+    h = rms_norm(params["final_norm"], h)
+    from repro.models.layers import maybe_gather
+    logits = h @ maybe_gather(params["head"].astype(h.dtype))
+    return logits, aux_total, new_caches
+
+
+def loss_fn(cfg, params, batch):
+    """Next-token cross entropy.  batch: tokens [B,S] (+ stub embeds)."""
+    tokens = batch["tokens"]
+    logits, aux, _ = forward(
+        cfg, params, tokens[:, :-1],
+        extra_embeds=batch.get("vision_embeds"),
+        frame_embeds=batch.get("frame_embeds"), mode="train")
+    # targets align with the text positions (vision prefix emits no loss)
+    tgt = tokens[:, 1:]
+    logits = logits[:, -tgt.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + cfg.aux_loss_weight * aux
+
+
+# ------------------------------------------------------------------ caches
+def init_caches(cfg, batch, cache_len, mem_len=0, dtype=jnp.bfloat16):
+    return [B.init_stack_cache(cfg, s, batch, cache_len, mem_len, dtype)
+            for s in cfg.stacks]
+
+
+def prefill(cfg, params, tokens, *, cache_len=None, extra_embeds=None,
+            frame_embeds=None):
+    """Run the full prompt, returning (logits_last, caches)."""
+    S = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None
+                           else 0)
+    cache_len = cache_len or S
+    mem_len = frame_embeds.shape[1] if frame_embeds is not None else 0
+    caches = init_caches(cfg, tokens.shape[0], cache_len, mem_len)
+    logits, _, new_caches = forward(
+        cfg, params, tokens, extra_embeds=extra_embeds,
+        frame_embeds=frame_embeds, mode="prefill", caches=caches)
+    return logits[:, -1], new_caches
+
+
+def decode_step(cfg, params, caches, token, pos):
+    """One token step.  token [B,1]; pos scalar absolute position.
+
+    Returns (logits [B,V], new_caches)."""
+    h = _embed(cfg, params, token)
+    if cfg.use_abs_pos:
+        D = cfg.d_model
+        pos_f = jnp.asarray(pos, jnp.float32)
+        dim = jnp.arange(0, D, 2) / D
+        ang = pos_f / (10000.0 ** dim)
+        emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        h = h + emb.astype(h.dtype)[None, None, :]
+    Bsz = h.shape[0]
+    new_caches = []
+    for i, (sp, stack) in enumerate(zip(params["stacks"], cfg.stacks)):
+        h, _, c = B.run_stack(cfg, stack, sp, h, None, mode="decode",
+                              caches=caches[i], pos=pos)
+        new_caches.append(c)
+    h = rms_norm(params["final_norm"], h)
+    logits = (h @ params["head"].astype(h.dtype))[:, 0]
+    return logits, new_caches

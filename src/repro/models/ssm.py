@@ -1,0 +1,236 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-parallel + decode.
+
+Implements the SSD algorithm of arXiv:2405.21060: the sequence is split
+into chunks; within a chunk the dual quadratic (attention-like) form runs
+on the MXU; across chunks a small recurrent state [H, P, N] is carried by
+an associative-scan-friendly recurrence.  Decode is the O(1) recurrent
+step.  This is the sub-quadratic path that makes ``long_500k`` runnable
+for the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int          # N
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64    # P
+    n_groups: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, dims: SSMDims):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    din, N, H, G = dims.d_inner, dims.d_state, dims.n_heads, dims.n_groups
+    d_in_proj = 2 * din + 2 * G * N + H   # z, x, B, C, dt
+    conv_ch = din + 2 * G * N             # conv over x, B, C
+    return {
+        "in_proj": init_linear(k1, dims.d_model, d_in_proj),
+        "conv_w": jax.random.normal(k2, (dims.d_conv, conv_ch),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        # inverse-softplus of dt_init=0.01 so softplus(dt_bias) ~ 0.01
+        "dt_bias": jnp.full((H,), math.log(math.expm1(0.01))),
+        "norm": {"g": jnp.ones((din,), jnp.float32)},
+        "out_proj": init_linear(k5, din, dims.d_model, scale=din ** -0.5),
+    }
+
+
+def _split_proj(proj, dims: SSMDims):
+    din, N, H, G = dims.d_inner, dims.d_state, dims.n_heads, dims.n_groups
+    z, xBC, dt = jnp.split(proj, [din, din + din + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv via K shifted adds (K is tiny)."""
+    K = w.shape[0]
+    out = xBC * w[K - 1].astype(xBC.dtype)
+    for k in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (k, 0), (0, 0)))[:, :-k]
+        out = out + shifted * w[K - 1 - k].astype(xBC.dtype)
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
+    """SSD core. xh [b,l,h,p]; dt [b,l,h]; A [h]<0; Bm/Cm [b,l,g,n]; D [h].
+
+    Scans over chunks carrying the [b,h,n,p] state, so peak activation
+    memory is one chunk's quadratic block, not the whole sequence's.
+    Returns y [b,l,h,p].
+    """
+    b, l_orig, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-l_orig) % chunk
+    if pad:  # zero-pad the tail: dt=0, x=0 contribute nothing causally
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_orig + pad
+    nc = l // chunk
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm, rep, axis=2)  # [b,l,h,n] broadcast groups -> heads
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    a = (dt.astype(f32) * A.astype(f32))        # [b,l,h] log-decay <= 0
+    xdt = xh * dt[..., None].astype(xh.dtype)   # dt folded into inputs
+    # chunk-major: [nc, b, chunk, ...]
+    def chunked(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    ac, xc_s, Bc_s, Cc_s, xres = map(
+        chunked, (a, xdt, Bh, Ch, xh))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_fn(hprev, inp):
+        a_c, xc, Bc, Cc, xr = inp                    # [b,chunk,...]
+        cum = jnp.cumsum(a_c, axis=1)                # [b,q,h]
+        total = cum[:, -1:, :]                       # [b,1,h]
+        # intra-chunk dual form
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # [b,q,k,h]
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", Cc.astype(f32),
+                            Bc.astype(f32)) * Lmat
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores.astype(xc.dtype), xc)
+        # contribution of carried state
+        y_off = jnp.einsum("bqhn,bqh,bhnp->bqhp",
+                           Cc.astype(f32), jnp.exp(cum), hprev)
+        # new chunk state
+        decay_to_end = jnp.exp(total - cum)          # [b,k,h]
+        S_c = jnp.einsum("bkhn,bkh,bkhp->bhnp",
+                         Bc.astype(f32), decay_to_end, xc.astype(f32))
+        hnew = hprev * jnp.exp(total[:, 0, :])[..., None, None] + S_c
+        y = y_diag.astype(f32) + y_off \
+            + D.astype(f32)[None, None, :, None] * xr.astype(f32)
+        return hnew, y.astype(xh.dtype)
+
+    h0 = jnp.zeros((b, h, n, p), f32)
+    _, ys = jax.lax.scan(scan_fn, h0, (ac, xc_s, Bc_s, Cc_s, xres))
+    return ys.swapaxes(0, 1).reshape(b, l, h, p)[:, :l_orig]
+
+
+def mamba2_apply(p, x, *, dims: SSMDims, chunk: int = 256):
+    """Full-sequence Mamba2 block. x [B,L,D] -> [B,L,D]."""
+    B, L, _ = x.shape
+    din, N, H, G = dims.d_inner, dims.d_state, dims.n_heads, dims.n_groups
+    proj = linear(p["in_proj"], x)
+    z, xBC, dt_raw = _split_proj(proj, dims)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xh, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = _ssd_chunked(xh.reshape(B, L, H, dims.head_dim), dt, A,
+                     Bm.reshape(B, L, G, N), Cm.reshape(B, L, G, N),
+                     p["D"], min(chunk, L))
+    y = y.reshape(B, L, din) * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y)
+    return linear(p["out_proj"], y)
+
+
+def mamba2_states(p, x, *, dims: SSMDims, chunk: int = 256):
+    """Final (conv_state, ssm_state) after a full prefill of x [B,L,D]."""
+    B, L, _ = x.shape
+    din, N, H, G = dims.d_inner, dims.d_state, dims.n_heads, dims.n_groups
+    proj = linear(p["in_proj"], x)
+    z, xBC_raw, dt_raw = _split_proj(proj, dims)
+    conv_state = xBC_raw[:, -(dims.d_conv - 1):, :]
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xh, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    ssm_state = _ssd_final_state(
+        xh.reshape(B, L, H, dims.head_dim), dt, A,
+        Bm.reshape(B, L, G, N), Cm.reshape(B, L, G, N), min(chunk, L))
+    return conv_state, ssm_state
+
+
+def _ssd_final_state(xh, dt, A, Bm, Cm, chunk):
+    b, l, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:  # zero tail: dt=0 & x=0 leave the state untouched
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l += pad
+    nc = l // chunk
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    a = dt.astype(f32) * A.astype(f32)
+    xdt = (xh * dt[..., None].astype(xh.dtype)).astype(f32)
+
+    def chunked(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    def scan_fn(hprev, inp):
+        a_c, xc, Bc = inp
+        cum = jnp.cumsum(a_c, axis=1)
+        total = cum[:, -1:, :]
+        decay_to_end = jnp.exp(total - cum)
+        S_c = jnp.einsum("bkhn,bkh,bkhp->bhnp", Bc.astype(f32),
+                         decay_to_end, xc)
+        return hprev * jnp.exp(total[:, 0, :])[..., None, None] + S_c, None
+
+    h0 = jnp.zeros((b, h, n, p), f32)
+    hfin, _ = jax.lax.scan(scan_fn, h0, (chunked(a), chunked(xdt),
+                                         chunked(Bh)))
+    # state layout used by decode: [B,H,N,P]
+    return hfin
+
+
+def mamba2_decode(p, x, conv_state, ssm_state, *, dims: SSMDims):
+    """O(1) recurrent step.  x [B,1,D]; conv_state [B,K-1,C];
+    ssm_state [B,H,N,P].  Returns (y, conv_state, ssm_state)."""
+    B = x.shape[0]
+    din, N, H, G = dims.d_inner, dims.d_state, dims.n_heads, dims.n_groups
+    K = dims.d_conv
+    proj = linear(p["in_proj"], x)[:, 0]                   # [B, d_in_proj]
+    z, xBC, dt_raw = _split_proj(proj, dims)
+    # conv over (state ++ current)
+    full = jnp.concatenate([conv_state,
+                            xBC[:, None, :].astype(conv_state.dtype)], 1)
+    w = p["conv_w"].astype(full.dtype)
+    conv = jnp.einsum("bkc,kc->bc", full, w) + p["conv_b"].astype(full.dtype)
+    conv = jax.nn.silu(conv)
+    conv_state = full[:, 1:]
+    xh, Bm, Cm = jnp.split(conv, [din, din + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    xhh = xh.reshape(B, H, dims.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # [B,H]
+    ssm_state = ssm_state * decay[..., None, None] \
+        + jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt, xhh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm_state) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xhh
+    y = y.reshape(B, din).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y)
+    return linear(p["out_proj"], y)[:, None, :], conv_state, ssm_state

@@ -1,0 +1,227 @@
+"""Sharding rules: DP / FSDP / TP (+pod) PartitionSpecs for params, caches,
+activations and optimizer state.
+
+Baseline layout (MaxText-style 2D):
+  * batch + FSDP dims ride the ('pod','data') axes (flattened),
+  * tensor-parallel dims ride 'model',
+  * per-tensor fallbacks when a dim is not divisible by the axis size
+    (e.g. GQA kv_heads=8 on a 16-way model axis shards head_dim instead;
+    odd head counts replicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.blocks import BlockSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Mesh axis naming for one run."""
+    batch: tuple[str, ...] = ("data",)   # DP/FSDP axes (may include 'pod')
+    tp: str = "model"
+
+    def sizes(self, mesh) -> tuple[int, int]:
+        d = int(np.prod([mesh.shape[a] for a in self.batch]))
+        t = mesh.shape[self.tp] if self.tp is not None else 1
+        return d, t
+
+
+def for_mesh(mesh, layout: str = "2d") -> Axes:
+    """layout '2d': DP/FSDP x TP (baseline).  layout 'fsdp': every axis is
+    a batch/FSDP axis — no tensor parallelism, no per-layer activation
+    all-reduces (the beyond-paper hillclimb layout for small-activation
+    archs)."""
+    names = mesh.axis_names
+    if layout == "fsdp":
+        return Axes(batch=tuple(names), tp=None)
+    return Axes(batch=tuple(n for n in names if n != "model"), tp="model")
+
+
+def _div(n, k):
+    return n % k == 0
+
+
+# ------------------------------------------------------------ param rules
+def _attn_shardings(ax: Axes, tp_size: int, dims_ok=True):
+    f, t = ax.batch, ax.tp
+    return {
+        "wq": {"w": P(f, t)}, "wk": {"w": P(f, t)}, "wv": {"w": P(f, t)},
+        "wo": {"w": P(t, f)},
+    }
+
+
+def _block_shardings(cfg, spec: BlockSpec, ax: Axes, tp: int):
+    f, t = ax.batch, ax.tp
+    if spec.kind == "mamba":
+        d = cfg.ssm
+        return {
+            "ln": {"g": P(None)},
+            "mixer": {
+                "in_proj": {"w": P(f, t)},
+                "conv_w": P(None, t), "conv_b": P(t),
+                "A_log": P(None), "D": P(None), "dt_bias": P(None),
+                "norm": {"g": P(t) if _div(d.d_inner, tp) else P(None)},
+                "out_proj": {"w": P(t, f)},
+            },
+        }
+    p = {"ln1": {"g": P(None)}, "ln2": {"g": P(None)},
+         "attn": _attn_shardings(ax, tp)}
+    if spec.moe:
+        p["moe"] = {
+            "router": {"w": P(f, None)},
+            "w_up": P(None, f, t), "w_gate": P(None, f, t),
+            "w_down": P(None, t, f),
+        }
+        if cfg.n_shared_experts:
+            p["moe"]["shared"] = {
+                "up": {"w": P(f, t)}, "gate": {"w": P(f, t)},
+                "down": {"w": P(t, f)}}
+    else:
+        p["mlp"] = {"up": {"w": P(f, t)}, "gate": {"w": P(f, t)},
+                    "down": {"w": P(t, f)}}
+    if spec.cross:
+        p["lnx"] = {"g": P(None)}
+        p["xattn"] = _attn_shardings(ax, tp)
+    return p
+
+
+def _stack_shardings(cfg, stack, ax: Axes, tp: int):
+    out = []
+    for spec in stack.blocks:
+        bs = _block_shardings(cfg, spec, ax, tp)
+        if not spec.shared:  # stacked leaves gain a leading layer dim
+            bs = jax.tree.map(
+                lambda p: P(*((None,) + tuple(p))), bs,
+                is_leaf=lambda x: isinstance(x, P))
+        out.append(bs)
+    return out
+
+
+def param_shardings(cfg, mesh, ax: Axes | None = None):
+    """PartitionSpec tree matching init_params(cfg) exactly."""
+    ax = ax or for_mesh(mesh)
+    _, tp = ax.sizes(mesh)
+    f, t = ax.batch, ax.tp
+    p = {
+        "embed": P(t, None),          # vocab-sharded (uneven shards OK)
+        "head": P(f, t),
+        "final_norm": {"g": P(None)},
+        "stacks": [_stack_shardings(cfg, s, ax, tp) for s in cfg.stacks],
+    }
+    if cfg.encoder is not None:
+        p["enc_stacks"] = [_stack_shardings(cfg, s, ax, tp)
+                           for s in cfg.encoder.stacks]
+        p["enc_norm"] = {"g": P(None)}
+    return p
+
+
+# ------------------------------------------------------------ cache rules
+def _kv_head_spec(cfg, mesh, ax: Axes):
+    """(kh_spec, hd_spec): shard kv_heads if divisible, else head_dim."""
+    if ax.tp is None:
+        return None, None
+    tp = mesh.shape[ax.tp]
+    if _div(cfg.n_kv_heads, tp):
+        return ax.tp, None
+    if _div(cfg.head_dim, tp):
+        return None, ax.tp
+    return None, None
+
+
+def cache_shardings(cfg, mesh, global_batch: int, ax: Axes | None = None):
+    """Cache PartitionSpec tree matching init_caches(cfg) structure.
+
+    batch >= dp => shard batch over DP axes; batch==1 (long-context) =>
+    shard the cache SEQUENCE over the DP axes instead (context parallel).
+    """
+    ax = ax or for_mesh(mesh)
+    dp, tp = ax.sizes(mesh)
+    seq_parallel = not _div(global_batch, dp)
+    bspec = None if seq_parallel else ax.batch
+    sspec = ax.batch if seq_parallel else None
+    kh, hd = _kv_head_spec(cfg, mesh, ax)
+    out = []
+    for stack in cfg.stacks:
+        st = []
+        for spec in stack.blocks:
+            if spec.kind == "mamba":
+                d = cfg.ssm
+                st.append({
+                    "conv": P(None, bspec, None,
+                              ax.tp if _div(d.d_inner + 2 * d.n_groups
+                                            * d.d_state, tp) else None),
+                    "ssm": P(None, bspec, None,
+                             ax.tp if _div(d.d_state, tp) else None, None),
+                })
+            else:
+                c = {"k": P(None, bspec, sspec, kh, hd),
+                     "v": P(None, bspec, sspec, kh, hd)}
+                if spec.cross:
+                    c["xk"] = P(None, bspec, sspec, kh, hd)
+                    c["xv"] = P(None, bspec, sspec, kh, hd)
+                st.append(c)
+        out.append(st)
+    return out
+
+
+# -------------------------------------------------------------- batch rules
+def batch_shardings(cfg, mesh, global_batch: int, kind: str,
+                    ax: Axes | None = None):
+    ax = ax or for_mesh(mesh)
+    dp, _ = ax.sizes(mesh)
+    bspec = ax.batch if _div(global_batch, dp) else None
+    b = {"tokens": P(bspec, None)}
+    if cfg.vision_tokens:
+        b["vision_embeds"] = P(bspec, None, None)
+    if cfg.encoder is not None:
+        b["frame_embeds"] = P(bspec, None, None)
+    return b
+
+
+def opt_shardings(param_specs):
+    """AdamW state mirrors param sharding (ZeRO-style: fully sharded)."""
+    return {"m": param_specs, "v": param_specs, "count": P()}
+
+
+def sanitize(spec_tree, sds_tree, mesh):
+    """Drop sharding on any dim the axis size does not divide.
+
+    jit in_shardings demand exact divisibility; configs have odd dims
+    (vocab 51865, head_dim 112, 80 ssm heads...).  Walks the spec tree
+    against the matching ShapeDtypeStruct tree and nulls offending axes.
+    """
+    def ax_size(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for a in entry:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[entry]
+
+    def fix(spec, sds):
+        if not isinstance(spec, P):
+            return spec
+        shape = sds.shape
+        ent = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for d, e in zip(shape, ent[:len(shape)]):
+            out.append(e if e is not None and d % ax_size(e) == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P))

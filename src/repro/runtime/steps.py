@@ -1,0 +1,66 @@
+"""Jittable train / prefill / decode steps used by launchers and dry-runs."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.runtime import optim as O
+from repro.runtime.compress import compress_decompress
+
+
+def make_train_step(cfg, oc: O.OptConfig, *, compress_grads: bool = False,
+                    mixed: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    mixed=True: params arrive in bf16 and the f32 master lives in
+    opt_state (halves weight-gather + grad-reduce wire bytes).
+    Gradients optionally pass the int8 compression hook (error feedback is
+    carried in opt_state['ef'] when enabled).
+    """
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        if compress_grads:
+            ef = opt_state.get("ef")
+            grads, ef = compress_decompress(grads, ef)
+            opt_state = dict(opt_state, ef=ef)
+        if mixed:
+            new_params, new_state, stats = O.adamw_update_mixed(
+                oc, grads,
+                {k: opt_state[k] for k in ("m", "v", "master", "count")},
+                params)
+        else:
+            new_params, new_state, stats = O.adamw_update(
+                oc, grads, {k: opt_state[k] for k in ("m", "v", "count")},
+                params)
+        if compress_grads:
+            new_state = dict(new_state, ef=opt_state["ef"])
+        return new_params, new_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg, cache_len=None):
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(
+            cfg, params, batch["tokens"], cache_len=cache_len,
+            extra_embeds=batch.get("vision_embeds"),
+            frame_embeds=batch.get("frame_embeds"))
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, caches, token, pos):
+        logits, new_caches = M.decode_step(cfg, params, caches, token, pos)
+        # greedy next token (serving driver may re-sample)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_tok, new_caches
+
+    return decode_step

@@ -1,0 +1,80 @@
+"""Unit tests for dry-run machinery that don't need 512 devices."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, skip_reason
+
+
+def test_cells_cover_40():
+    cs = cells()
+    assert len(cs) == 40
+    skips = [c for c in cs if c[2]]
+    # exactly the full-attention archs skip long_500k
+    assert {(a, s) for a, s, r in skips} == {
+        (a, "long_500k") for a in ARCHS
+        if a not in ("zamba2-7b", "gemma3-4b", "mamba2-2.7b")}
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024] %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[32,512]{1,0} all-gather(bf16[2,512] %y), replica_groups=[8,16]<=[128], dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8] %z), source_target_pairs={{0,1}}
+"""
+    out = parse_collectives(hlo)
+    kinds = {c["kind"]: c for c in out}
+    assert kinds["all-reduce"]["bytes"] == 16 * 1024 * 4
+    assert kinds["all-reduce"]["group"] == 4
+    # ring all-reduce wire = 2 * size * (g-1)/g
+    assert kinds["all-reduce"]["wire_bytes"] == 2 * 16 * 1024 * 4 * 3 / 4
+    assert kinds["all-gather"]["group"] == 16
+    assert kinds["collective-permute"]["wire_bytes"] == 8 * 8 * 2
+
+
+def test_input_specs_all_cells():
+    from repro.launch.dryrun import input_specs
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if skip_reason(arch, shape):
+                continue
+            cfg, batch, (seq, gb, kind) = input_specs(arch, shape)
+            assert "tokens" in batch
+            if kind != "decode":
+                total = batch["tokens"].shape[1] + (
+                    batch["vision_embeds"].shape[1]
+                    if "vision_embeds" in batch else 0)
+                assert total == seq, (arch, shape)
+            else:
+                assert batch["tokens"].shape == (gb, 1)
+
+
+def test_analytic_model_sane():
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.analytic import cell_model
+    m = cell_model("deepseek-7b", "train_4k")
+    # 6ND vs 4x-forward analytic: ratio must be within 2x
+    assert 0.5 < m.model_flops_dev / m.flops_dev < 1.2
+    assert m.bottleneck in ("compute", "memory", "collective")
+    opt = cell_model("deepseek-7b", "train_4k", layout="fsdp", mixed=True)
+    assert opt.step_time < m.step_time          # the hillclimb must help
+    assert opt.mfu_at_roofline > m.mfu_at_roofline
+
+
+def test_analytic_vs_spatial_dryrun_crosscheck():
+    """If the spatial artifact exists, analytic flops within 40%."""
+    import json
+    import os
+    f = "artifacts/dryrun_spatial/deepseek-7b_train_4k_single.json"
+    if not os.path.exists(f):
+        pytest.skip("spatial artifact not generated in this environment")
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.analytic import cell_model
+    rec = json.load(open(f))
+    hlo_flops = rec["roofline"]["hlo_flops_per_device"]
+    m = cell_model("deepseek-7b", "train_4k")
+    assert 0.6 < m.flops_dev / hlo_flops < 1.7, \
+        (m.flops_dev, hlo_flops)

@@ -1,0 +1,72 @@
+"""Sharding rules: structural + divisibility guarantees for all archs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models import init_params, model as M
+from repro.runtime import sharding as S
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Mesh over fake device objects — good enough for spec derivation."""
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[
+        : int(np.prod(shape))].reshape(shape)
+    return Mesh(devs, axes)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_sharding_tree_matches_params(arch):
+    """Spec tree and param tree must have identical structure, and after
+    sanitize every spec divides its dim."""
+    cfg = get_config(arch)
+    mesh = _fake_mesh()
+    params_sds = jax.eval_shape(
+        lambda k: M.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    spec = S.param_shardings(cfg, mesh, S.for_mesh(mesh))
+    a = jax.tree.structure(params_sds)
+    b = jax.tree.structure(spec, is_leaf=lambda x: isinstance(x, P))
+    assert a == b, f"{arch}: structure drift between init and sharding"
+    fixed = S.sanitize(spec, params_sds, mesh)
+    for (path, p), sds in zip(
+            jax.tree_util.tree_flatten_with_path(
+                fixed, is_leaf=lambda x: isinstance(x, P))[0],
+            jax.tree.leaves(params_sds)):
+        for d, e in zip(sds.shape, tuple(p) + (None,) * len(sds.shape)):
+            if e is None:
+                continue
+            size = (np.prod([mesh.shape[a_] for a_ in e])
+                    if isinstance(e, tuple) else mesh.shape[e])
+            assert d % size == 0, (arch, path, sds.shape, p)
+
+
+@pytest.mark.parametrize("layout", ["2d", "fsdp"])
+def test_layout_axes(layout):
+    mesh = _fake_mesh()
+    ax = S.for_mesh(mesh, layout)
+    dp, tp = ax.sizes(mesh)
+    if layout == "fsdp":
+        assert dp == 256 and tp == 1 and ax.tp is None
+    else:
+        assert dp == 16 and tp == 16
+
+
+def test_cache_sharding_seq_parallel_for_batch1():
+    cfg = get_config("gemma3-4b")
+    mesh = _fake_mesh()
+    specs = S.cache_shardings(cfg, mesh, global_batch=1)
+    leaf = specs[0][0]["k"]   # [count, B, S, KH, hd]
+    assert leaf[1] is None          # batch=1 cannot shard batch
+    assert leaf[2] in ("data", ("data",))   # sequence takes the DP axes
+
+
+def test_multi_pod_axes():
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    ax = S.for_mesh(mesh)
+    assert ax.batch == ("pod", "data")
+    dp, tp = ax.sizes(mesh)
+    assert dp == 32 and tp == 16
