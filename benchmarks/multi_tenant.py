@@ -1,0 +1,117 @@
+"""Multi-tenant serving benchmark: context bank vs per-call load vs recompile.
+
+The paper's area/switch argument at request scale: one resident executor
+serving N kernels should beat (a) rebuilding + re-uploading a context per
+request (``Overlay.load`` each call) and by orders of magnitude (b) the
+vendor-flow analogue (``spatial_jit``: fresh XLA trace + compile per
+kernel).  Reports requests/sec over a mixed-kernel workload.
+
+Run: PYTHONPATH=src python -m benchmarks.multi_tenant
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.overlay import (Overlay, compile_program, spatial_jit)
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.core import vm as vm_mod
+from repro.launch.serve import OverlayServer
+
+REQ_BATCH = 256
+N_REQUESTS = 36          # mixed round-robin over the 9 paper kernels
+RECOMPILE_REQUESTS = 6   # XLA compile per request is ~seconds; sample it
+
+
+def _workload(kernels, n_requests, seed=0):
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    reqs = []
+    for i in range(n_requests):
+        k = kernels[names[i % len(names)]]
+        xs = [rng.uniform(-2, 2, (REQ_BATCH,)).astype(np.float32)
+              for _ in k.dfg.inputs]
+        reqs.append((k, xs))
+    return reqs
+
+
+def _block(outs):
+    jax.block_until_ready([y for ys in outs for y in ys])
+
+
+#: timed repetitions per path — the CI smoke job runs on noisy shared
+#: runners, so a single timed rep would make the win-assertions flaky
+TIMED_REPS = 3
+
+
+def bench_bank(kernels, reqs) -> tuple[float, int]:
+    srv = OverlayServer(bank_capacity=len(kernels))
+    for k, xs in reqs:
+        srv.submit(k, xs)
+    _ = srv.flush()                      # warmup: compiles the bucket
+    n0 = vm_mod.vm_exec_multi._cache_size()
+    dts = []
+    for _rep in range(TIMED_REPS):
+        for k, xs in reqs:
+            srv.submit(k, xs)
+        t0 = time.perf_counter()
+        results = srv.flush()
+        _block(list(results.values()))
+        dts.append(time.perf_counter() - t0)
+    retraces = vm_mod.vm_exec_multi._cache_size() - n0
+    return len(reqs) / sorted(dts)[len(dts) // 2], retraces
+
+
+def bench_per_call_load(kernels, reqs) -> float:
+    ov = Overlay()
+    k0, xs0 = reqs[0]
+    _block([ov(ov.load(k0), xs0)])       # warmup the single-context executor
+    dts = []
+    for _rep in range(TIMED_REPS):
+        t0 = time.perf_counter()
+        outs = [ov(ov.load(k), xs) for k, xs in reqs]
+        _block(outs)
+        dts.append(time.perf_counter() - t0)
+    return len(reqs) / sorted(dts)[len(dts) // 2]
+
+
+def bench_spatial_recompile(reqs) -> float:
+    t0 = time.perf_counter()
+    outs = []
+    for k, xs in reqs[:RECOMPILE_REQUESTS]:
+        fn = spatial_jit(k.dfg)          # fresh trace + XLA compile each time
+        outs.append(fn(xs))
+        fn._clear_cache()
+    _block(outs)
+    return RECOMPILE_REQUESTS / (time.perf_counter() - t0)
+
+
+def run():
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    reqs = _workload(kernels, N_REQUESTS)
+    rps_bank, retraces = bench_bank(kernels, reqs)
+    rps_load = bench_per_call_load(kernels, reqs)
+    rps_jit = bench_spatial_recompile(reqs)
+    rows = [("bank_dispatch", round(rps_bank, 1), retraces),
+            ("per_call_load", round(rps_load, 1), "-"),
+            ("spatial_recompile", round(rps_jit, 1), "-")]
+    return ("path,requests_per_sec,retraces_after_warmup".split(","),
+            rows, rps_bank, rps_load, rps_jit, retraces)
+
+
+def main():
+    header, rows, rps_bank, rps_load, rps_jit, retraces = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(f"# bank vs per-call load: {rps_bank / rps_load:.1f}x; "
+          f"bank vs recompile: {rps_bank / rps_jit:.0f}x")
+    assert retraces == 0, "bank path retraced after warmup"
+    assert rps_bank > rps_load, (rps_bank, rps_load)
+    assert rps_bank > rps_jit, (rps_bank, rps_jit)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,8 +18,8 @@ def _timeit(fn, iters=3):
 
 def main() -> None:
     from benchmarks import (area_analogue, context_switch, fig5_fus,
-                            roofline, table1_schedule, table2_dfg,
-                            table3_area_tput)
+                            multi_tenant, roofline, table1_schedule,
+                            table2_dfg, table3_area_tput)
 
     print("== Table I: gradient schedule trace ==")
     t1 = _timeit(table1_schedule.main, 1)
@@ -33,6 +33,8 @@ def main() -> None:
     t4 = _timeit(context_switch.main, 1)
     print("== Area analogue (TM vs spatial compiled size) ==")
     t5 = _timeit(area_analogue.main, 1)
+    print("== Multi-tenant serving (context bank) ==")
+    t7 = _timeit(multi_tenant.main, 1)
     print("== Roofline (from dry-run artifacts) ==")
     try:
         t6 = _timeit(roofline.main, 1)
@@ -46,6 +48,7 @@ def main() -> None:
     print(f"fig5_fus,{t35:.0f},TM FUs = depth vs SCFU = ops")
     print(f"context_switch,{t4:.0f},worst ctx <0.35us @300MHz")
     print(f"area_analogue,{t5:.0f},tm executor vs spatial programs")
+    print(f"multi_tenant,{t7:.0f},bank beats per-call load + recompile")
     print(f"roofline,{t6:.0f},per-cell three-term table")
 
 

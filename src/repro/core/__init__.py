@@ -7,16 +7,17 @@ isa (32-bit no-decoder words, 40-bit context stream) -> overlay executor
 Analytical models in ``area`` reproduce the paper's Tables II/III.
 """
 
+from repro.core.bank import BankError, ContextBank
 from repro.core.dfg import DFG, Node, Op
 from repro.core.frontend import build_dfg
 from repro.core.schedule import Schedule, schedule
 from repro.core.isa import Program, encode
 from repro.core.overlay import (CompiledKernel, Overlay, compile_program,
                                 spatial_jit)
-from repro.core.vm import dfg_eval
+from repro.core.vm import dfg_eval, vm_exec, vm_exec_multi
 
 __all__ = [
     "DFG", "Node", "Op", "build_dfg", "Schedule", "schedule", "Program",
     "encode", "CompiledKernel", "Overlay", "compile_program", "spatial_jit",
-    "dfg_eval",
+    "dfg_eval", "ContextBank", "BankError", "vm_exec", "vm_exec_multi",
 ]

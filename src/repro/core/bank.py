@@ -1,0 +1,192 @@
+"""Multi-tenant context bank: N resident kernel contexts, one executor.
+
+The paper's area argument restated at serving scale (Sections III/V): a
+single time-multiplexed FU pipeline hosts *many* kernels because a kernel
+is just a context — a stream of 40-bit instruction words — and switching
+costs 0.27 us, not a reconfiguration.  Here the bank stacks N encoded
+contexts on device as [N, S_MAX, IM_DEPTH] arrays; ``vm_exec_multi`` (and
+the Pallas ``tmfu_pipeline_multi``) select a context by int32 id with a
+pure gather, so a mixed-kernel request batch runs through ONE compiled
+executable and the context switch is literally an index.
+
+Residency is managed LRU: loading a kernel into a full bank evicts the
+least-recently-used resident and reuses its slot id.  All updates are
+functional (``.at[slot].set``) — the executor never recompiles, only the
+instruction data moves, mirroring the daisy-chain context load.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dfg import Op
+from repro.core.isa import IM_DEPTH, Program
+from repro.core.vm import S_MAX, make_context
+
+#: default number of resident contexts (two cascaded 8-kernel groups)
+DEFAULT_CAPACITY = 8
+#: default output-slot padding width shared by every resident kernel
+DEFAULT_MAX_OUTPUTS = 8
+
+
+class BankError(ValueError):
+    pass
+
+
+def context_key(kernel) -> tuple[str, str]:
+    """Content identity of a kernel's encoded context.
+
+    Residency and dispatch grouping key on this — (name, digest of the
+    encoded instruction words + constant tables) — so two different
+    programs that happen to share a name can never alias each other in the
+    bank.  Cached on the Program object (encoding is immutable post-build).
+    """
+    program: Program = getattr(kernel, "program", kernel)
+    key = getattr(program, "_context_key", None)
+    if key is None:
+        h = hashlib.sha1()
+        for img in program.images:
+            h.update(np.asarray(img.words, np.uint32).tobytes())
+            h.update(np.asarray(img.consts, np.float32).tobytes())
+            h.update(bytes([img.n_loads]))
+        h.update(np.asarray(getattr(program, "_output_slots", []),
+                            np.int32).tobytes())
+        key = (program.name, h.hexdigest())
+        program._context_key = key
+    return key
+
+
+class ContextBank:
+    """Fixed-capacity, LRU-managed store of device-resident contexts.
+
+    All instruction state lives in four stacked arrays whose leading axis
+    is the slot id; ``tree()`` hands them to ``vm_exec_multi`` /
+    ``tmfu_pipeline_multi`` unchanged.  ``out_idx`` rows are padded to
+    ``max_outputs`` (pad rows repeat slot 0 — harmless, callers slice to
+    the kernel's real ``n_outputs``).
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 s_max: int = S_MAX, dtype=jnp.float32,
+                 max_outputs: int = DEFAULT_MAX_OUTPUTS):
+        if capacity < 1:
+            raise BankError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.s_max = s_max
+        self.dtype = dtype
+        self.max_outputs = max_outputs
+        # identity padding for empty slots: BYP slot i <- rf[i], like
+        # make_context's padding, so an unloaded slot is a pure pass-through
+        ident = np.tile(np.arange(IM_DEPTH, dtype=np.int32),
+                        (capacity, s_max, 1))
+        self.op = jnp.full((capacity, s_max, IM_DEPTH), int(Op.BYP),
+                           jnp.int32)
+        self.src_a = jnp.asarray(ident)
+        self.src_b = jnp.asarray(ident)
+        self.imm = jnp.zeros((capacity, s_max, IM_DEPTH), dtype)
+        self.out_idx = jnp.zeros((capacity, max_outputs), jnp.int32)
+        #: residency map: context_key -> slot, MRU last
+        self._lru: OrderedDict[tuple[str, str], int] = OrderedDict()
+        self._free = list(range(capacity))
+        self._meta: dict[int, dict] = {}  # slot -> {name, n_inputs, n_outputs}
+        #: host-side cache of encoded contexts, so an eviction reload is a
+        #: pure device write (no re-run of the Python encode loop); bounded
+        #: LRU (4x capacity) so a churning tenant population cannot pin the
+        #: device arrays of every kernel ever seen
+        self._ctx_cache: OrderedDict[tuple[str, str], object] = OrderedDict()
+        self._ctx_cache_cap = 4 * capacity
+        self.n_loads = 0
+        self.n_evictions = 0
+        self.n_hits = 0
+
+    # ------------------------------------------------------------- residency
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, kernel) -> bool:
+        """Membership by kernel/Program (exact content) or by name (str)."""
+        if isinstance(kernel, str):
+            return any(k[0] == kernel for k in self._lru)
+        return context_key(kernel) in self._lru
+
+    @property
+    def resident(self) -> tuple[str, ...]:
+        """Resident kernel names, LRU first."""
+        return tuple(name for name, _ in self._lru)
+
+    def slot_of(self, kernel) -> int | None:
+        """Slot id of a resident kernel (touches LRU), else None."""
+        key = context_key(kernel)
+        slot = self._lru.get(key)
+        if slot is not None:
+            self._lru.move_to_end(key)
+            self.n_hits += 1
+        return slot
+
+    def meta(self, slot: int) -> dict:
+        return self._meta[slot]
+
+    # ----------------------------------------------------------------- load
+    def load(self, kernel) -> int:
+        """Make a kernel resident and return its slot id.
+
+        ``kernel`` is an ``overlay.CompiledKernel`` (or a bare ``Program``).
+        Residency is keyed on context CONTENT (see ``context_key``), so a
+        same-named but different program is a distinct tenant, never an
+        alias.  A resident kernel is an LRU touch; otherwise the context
+        image is written into a free slot, evicting the LRU resident when
+        the bank is full (its slot id is reused by the newcomer).
+        """
+        program: Program = getattr(kernel, "program", kernel)
+        key = context_key(program)
+        name = program.name
+        slot = self._lru.get(key)
+        if slot is not None:
+            self._lru.move_to_end(key)
+            self.n_hits += 1
+            return slot
+        ctx = self._ctx_cache.get(key)
+        if ctx is None:
+            ctx = make_context(program, self.s_max, self.dtype)
+            self._ctx_cache[key] = ctx
+            while len(self._ctx_cache) > self._ctx_cache_cap:
+                self._ctx_cache.popitem(last=False)
+        else:
+            self._ctx_cache.move_to_end(key)
+        if ctx.n_outputs > self.max_outputs:
+            raise BankError(
+                f"{name}: {ctx.n_outputs} outputs > bank max_outputs="
+                f"{self.max_outputs}")
+        if self._free:
+            slot = self._free.pop(0)
+        else:
+            _evicted, slot = self._lru.popitem(last=False)
+            del self._meta[slot]
+            self.n_evictions += 1
+        self.op = self.op.at[slot].set(ctx.op)
+        self.src_a = self.src_a.at[slot].set(ctx.src_a)
+        self.src_b = self.src_b.at[slot].set(ctx.src_b)
+        self.imm = self.imm.at[slot].set(ctx.imm)
+        out_pad = np.zeros(self.max_outputs, np.int32)
+        out_pad[:ctx.n_outputs] = np.asarray(ctx.out_idx)
+        self.out_idx = self.out_idx.at[slot].set(jnp.asarray(out_pad))
+        self._meta[slot] = {"name": name, "n_inputs": ctx.n_inputs,
+                            "n_outputs": ctx.n_outputs,
+                            "context_bytes": ctx.context_bytes}
+        self._lru[key] = slot
+        self.n_loads += 1
+        return slot
+
+    # ------------------------------------------------------------- executor
+    def tree(self):
+        """The stacked instruction arrays, in vm_exec_multi leaf order."""
+        return (self.op, self.src_a, self.src_b, self.imm)
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "resident": len(self),
+                "loads": self.n_loads, "evictions": self.n_evictions,
+                "hits": self.n_hits}

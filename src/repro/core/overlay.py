@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -25,10 +26,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import vm
+from repro.core.bank import (DEFAULT_MAX_OUTPUTS, BankError, ContextBank,
+                             context_key)
 from repro.core.dfg import DFG
-from repro.core.isa import Program, encode
+from repro.core.isa import RF_DEPTH, Program, encode
 from repro.core.schedule import Schedule, schedule
 from repro.core.vm import Context, dfg_eval, make_context, pad_inputs
+
+#: default per-tile batch width for bank dispatch (VPU lane multiple)
+DISPATCH_TILE = 128
 
 
 @dataclasses.dataclass
@@ -78,6 +84,113 @@ class Overlay:
         else:
             ys = vm.vm_exec(ctx.tree(), ctx.out_idx, x)
         return [ys[i] for i in range(ctx.n_outputs)]
+
+    # ---------------------------------------------------------- multi-tenant
+    def load_many(self, kernels, capacity: int | None = None,
+                  max_outputs: int = DEFAULT_MAX_OUTPUTS) -> ContextBank:
+        """Load a family of kernels into a fresh ContextBank.
+
+        The bank's stacked arrays feed ``vm_exec_multi`` (or the Pallas
+        multi kernel) so every resident kernel is reachable by slot id from
+        ONE compiled executable.
+        """
+        ks = list(kernels)
+        bank = ContextBank(capacity or max(len(ks), 1), s_max=self.s_max,
+                           dtype=self.dtype, max_outputs=max_outputs)
+        for k in ks:
+            bank.load(k)
+        return bank
+
+    def dispatch(self, bank: ContextBank, requests, tile: int = DISPATCH_TILE):
+        """Serve a mixed-kernel batch through the bank in one launch family.
+
+        ``requests`` is a list of ``(CompiledKernel, xs)`` pairs (``xs`` a
+        list of 1-D input arrays, all the same length within a request).
+        Requests are grouped by kernel, each group's batch is padded to the
+        ``tile`` boundary and split into fixed-width tiles, and the whole
+        mixed tile stack runs through ``vm_exec_multi`` as one call — the
+        context switch between tiles is a gathered index.  The tile count is
+        padded to the next power of two so repeated mixed workloads land in
+        a handful of executable buckets (zero retraces after warmup).
+
+        Returns one output list per request, in request order.  The batch
+        may reference at most ``bank.capacity`` distinct kernels; queues
+        with larger working sets are round-robined by
+        ``launch.serve.OverlayServer``.
+        """
+        if not requests:
+            return []
+        # group by context CONTENT, not name: two distinct programs sharing
+        # a name must never be served from one slot
+        groups: OrderedDict[tuple, list[int]] = OrderedDict()
+        for i, (k, _) in enumerate(requests):
+            groups.setdefault(context_key(k.program), []).append(i)
+        if len(groups) > bank.capacity:
+            raise BankError(
+                f"batch references {len(groups)} kernels > bank capacity "
+                f"{bank.capacity}; split into rounds (see OverlayServer)")
+
+        # first pass: residency + tile layout per group
+        specs = []        # (key, idxs, kern, slot, lens, total, n_tiles, start)
+        g_total = 0
+        for key, idxs in groups.items():
+            kern = requests[idxs[0]][0]
+            slot = bank.load(kern)
+            lens = [int(np.shape(requests[i][1][0])[0]) for i in idxs]
+            total = sum(lens)
+            n_tiles = -(-total // tile)
+            specs.append((key, idxs, kern, slot, lens, total, n_tiles,
+                          g_total))
+            g_total += n_tiles
+
+        if g_total == 0:
+            # every request in the batch was zero-length: nothing to launch
+            return [[jnp.zeros((0,), self.dtype) for _ in k.dfg.outputs]
+                    for k, _ in requests]
+
+        # second pass: assemble the whole [G_pad, RF_DEPTH, tile] batch in
+        # ONE host buffer (a single device transfer — the hot serving path
+        # must not pay per-group/per-tile device dispatches), padding the
+        # tile count to a power-of-two bucket with replicas of tile 0
+        np_dtype = np.dtype(self.dtype)
+        g_pad = 1 << (g_total - 1).bit_length()
+        x_np = np.zeros((g_pad, RF_DEPTH, tile), np_dtype)
+        ids_np = np.zeros(g_pad, np.int32)
+        layout: dict[tuple, tuple[int, int, list[int]]] = {}
+        for key, idxs, kern, slot, lens, total, n_tiles, start in specs:
+            layout[key] = (start, n_tiles, lens)
+            if n_tiles == 0:
+                continue
+            n_in = len(kern.dfg.inputs)
+            buf = np.zeros((n_in, n_tiles * tile), np_dtype)
+            for j in range(n_in):
+                buf[j, :total] = np.concatenate(
+                    [np.asarray(requests[i][1][j], np_dtype) for i in idxs])
+            x_np[start:start + n_tiles, :n_in, :] = \
+                buf.reshape(n_in, n_tiles, tile).transpose(1, 0, 2)
+            ids_np[start:start + n_tiles] = slot
+        x_np[g_total:] = x_np[0]
+        ids_np[g_total:] = ids_np[0]
+        x_stack = jnp.asarray(x_np)
+        id_arr = jnp.asarray(ids_np)
+
+        if self.backend == "pallas":
+            from repro.kernels.tmfu import ops as tmfu_ops
+            ys = tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack)
+        else:
+            ys = vm.vm_exec_multi(bank.tree(), bank.out_idx, id_arr, x_stack)
+
+        results: list[list[jax.Array] | None] = [None] * len(requests)
+        for key, idxs in groups.items():
+            start, n_tiles, lens = layout[key]
+            n_out = len(requests[idxs[0]][0].dfg.outputs)
+            block = ys[start:start + n_tiles]          # [nt, max_out, tile]
+            flat = jnp.moveaxis(block, 1, 0).reshape(ys.shape[1], -1)
+            off = 0
+            for i, n in zip(idxs, lens):
+                results[i] = [flat[j, off:off + n] for j in range(n_out)]
+                off += n
+        return results
 
     # ------------------------------------------------------------ timing
     def time_context_switch(self, kernel: CompiledKernel,

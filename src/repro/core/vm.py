@@ -132,13 +132,8 @@ def _output_slots(program: Program) -> np.ndarray:
     return np.asarray(slots, dtype=np.int32)
 
 
-@partial(jax.jit, static_argnames=("rf_depth",))
-def vm_exec(ctx_tree, out_idx, x, rf_depth: int = RF_DEPTH):
-    """Run the overlay: x [rf_depth, batch] -> outputs [n_out, batch].
-
-    ``x`` carries the primary inputs in slots [0, n_inputs); the caller pads.
-    Compiled once per (shape, dtype); ctx_tree is data.
-    """
+def _vm_exec(ctx_tree, out_idx, x):
+    """Shared executor core: x [rf_depth, batch] -> outputs [n_out, batch]."""
     op, src_a, src_b, imm = ctx_tree
     branches = _branches(x.dtype)
 
@@ -157,6 +152,39 @@ def vm_exec(ctx_tree, out_idx, x, rf_depth: int = RF_DEPTH):
 
     rf, _ = jax.lax.scan(stage_fn, x, (op, src_a, src_b, imm))
     return rf[out_idx]
+
+
+@partial(jax.jit, static_argnames=("rf_depth",))
+def vm_exec(ctx_tree, out_idx, x, rf_depth: int = RF_DEPTH):
+    """Run the overlay: x [rf_depth, batch] -> outputs [n_out, batch].
+
+    ``x`` carries the primary inputs in slots [0, n_inputs); the caller pads.
+    Compiled once per (shape, dtype); ctx_tree is data.
+    """
+    return _vm_exec(ctx_tree, out_idx, x)
+
+
+@partial(jax.jit, static_argnames=("rf_depth",))
+def vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x,
+                  rf_depth: int = RF_DEPTH):
+    """Multi-tenant executor: one compiled program serves a whole bank.
+
+    ``bank_tree`` leaves are the ContextBank's stacked [N, S_MAX, IM_DEPTH]
+    instruction arrays; ``out_idx_bank`` is [N, max_outputs] int32;
+    ``ctx_ids`` is [G] int32 selecting a resident context per tile and ``x``
+    is [G, rf_depth, tile].  Context selection is a pure gather on a traced
+    id — a mixed-kernel batch runs through ONE executable, the serving-scale
+    analogue of the paper's daisy-chained context stream (no re-place/route,
+    no XLA retrace; the switch cost is an index).
+
+    Returns [G, max_outputs, tile]; callers slice each tile's rows down to
+    the selected kernel's n_outputs.
+    """
+    def one(cid, xg):
+        tree = tuple(leaf[cid] for leaf in bank_tree)
+        return _vm_exec(tree, out_idx_bank[cid], xg)
+
+    return jax.vmap(one)(ctx_ids, x)
 
 
 def pad_inputs(xs: list[jax.Array], rf_depth: int = RF_DEPTH) -> jax.Array:

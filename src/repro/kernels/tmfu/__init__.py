@@ -1,5 +1,6 @@
-from repro.kernels.tmfu.ops import tmfu_pipeline
-from repro.kernels.tmfu.kernel import tmfu_pipeline_rf
+from repro.kernels.tmfu.ops import tmfu_pipeline, tmfu_pipeline_multi
+from repro.kernels.tmfu.kernel import tmfu_pipeline_rf, tmfu_pipeline_rf_multi
 from repro.kernels.tmfu.ref import tmfu_ref
 
-__all__ = ["tmfu_pipeline", "tmfu_pipeline_rf", "tmfu_ref"]
+__all__ = ["tmfu_pipeline", "tmfu_pipeline_multi", "tmfu_pipeline_rf",
+           "tmfu_pipeline_rf_multi", "tmfu_ref"]

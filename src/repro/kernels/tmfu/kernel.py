@@ -69,32 +69,34 @@ def _branch_table(dtype):
     ]
 
 
-def _tmfu_kernel(op_ref, a_ref, b_ref, imm_ref,   # scalar-prefetch (SMEM)
-                 x_ref, o_ref,                    # VMEM in/out tiles
-                 rf_a, rf_b,                      # VMEM scratch (ping-pong)
-                 *, n_stages: int, dtype):
+def _run_stages(pfx, op_ref, a_ref, b_ref, imm_ref, rf_a, rf_b,
+                *, n_stages: int, dtype):
+    """Shared stage loop: run ``n_stages`` over the ping-pong RF buffers.
+
+    ``pfx`` prefixes every SMEM instruction fetch — ``()`` for the
+    single-context [S, IM] layout, ``(cid,)`` for the stacked multi-tenant
+    [N, S, IM] bank — so the two datapaths cannot drift apart.
+    """
     branches = _branch_table(dtype)
     is_float = jnp.issubdtype(dtype, jnp.floating)
-
-    rf_a[...] = x_ref[...]
 
     def stage_body(s, _):
         # ping-pong: even stages read rf_a/write rf_b, odd the reverse
         def instr_body(i, _):
-            va_a = pl.load(rf_a, (pl.ds(a_ref[s, i], 1), slice(None)))
-            va_b = pl.load(rf_b, (pl.ds(a_ref[s, i], 1), slice(None)))
-            vb_a = pl.load(rf_a, (pl.ds(b_ref[s, i], 1), slice(None)))
-            vb_b = pl.load(rf_b, (pl.ds(b_ref[s, i], 1), slice(None)))
+            va_a = pl.load(rf_a, (pl.ds(a_ref[(*pfx, s, i)], 1), slice(None)))
+            va_b = pl.load(rf_b, (pl.ds(a_ref[(*pfx, s, i)], 1), slice(None)))
+            vb_a = pl.load(rf_a, (pl.ds(b_ref[(*pfx, s, i)], 1), slice(None)))
+            vb_b = pl.load(rf_b, (pl.ds(b_ref[(*pfx, s, i)], 1), slice(None)))
             even = s % 2 == 0
             va = jnp.where(even, va_a, va_b)
             vb = jnp.where(even, vb_a, vb_b)
-            raw = imm_ref[s, i]
+            raw = imm_ref[(*pfx, s, i)]
             if is_float:
                 cv = jax.lax.bitcast_convert_type(
                     raw, jnp.float32).astype(dtype)
             else:
                 cv = raw.astype(dtype)
-            res = jax.lax.switch(op_ref[s, i], branches, va, vb, cv)
+            res = jax.lax.switch(op_ref[(*pfx, s, i)], branches, va, vb, cv)
 
             @pl.when(even)
             def _():
@@ -105,15 +107,79 @@ def _tmfu_kernel(op_ref, a_ref, b_ref, imm_ref,   # scalar-prefetch (SMEM)
                 pl.store(rf_a, (pl.ds(i, 1), slice(None)), res)
             return 0
 
-        jax.lax.fori_loop(0, op_ref.shape[1], instr_body, 0)
+        jax.lax.fori_loop(0, op_ref.shape[-1], instr_body, 0)
         return 0
 
     jax.lax.fori_loop(0, n_stages, stage_body, 0)
+
+
+def _tmfu_kernel(op_ref, a_ref, b_ref, imm_ref,   # scalar-prefetch (SMEM)
+                 x_ref, o_ref,                    # VMEM in/out tiles
+                 rf_a, rf_b,                      # VMEM scratch (ping-pong)
+                 *, n_stages: int, dtype):
+    rf_a[...] = x_ref[...]
+    _run_stages((), op_ref, a_ref, b_ref, imm_ref, rf_a, rf_b,
+                n_stages=n_stages, dtype=dtype)
     # after S stages the live RF is rf_a if S even else rf_b
     if n_stages % 2 == 0:
         o_ref[...] = rf_a[...]
     else:
         o_ref[...] = rf_b[...]
+
+
+def _tmfu_kernel_multi(ids_ref, op_ref, a_ref, b_ref, imm_ref,  # SMEM
+                       x_ref, o_ref,                    # VMEM in/out tiles
+                       rf_a, rf_b,                      # VMEM scratch
+                       *, n_stages: int, dtype):
+    """Multi-tenant TMFU: grid step g executes context ``ids_ref[g]``.
+
+    The instruction bank rides in SMEM as stacked [N, S, IM] arrays; the
+    per-tile context id is a scalar-prefetch operand, so selecting a kernel
+    is an SMEM row offset — the serving analogue of pointing the FU at a
+    different daisy-chained context, with zero recompilation.
+    """
+    cid = ids_ref[pl.program_id(0)]
+    rf_a[...] = x_ref[0]
+    _run_stages((cid,), op_ref, a_ref, b_ref, imm_ref, rf_a, rf_b,
+                n_stages=n_stages, dtype=dtype)
+    if n_stages % 2 == 0:
+        o_ref[...] = rf_a[...][None]
+    else:
+        o_ref[...] = rf_b[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tmfu_pipeline_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
+                           interpret: bool = True):
+    """Run a mixed-context tile batch: x [G, RF_DEPTH, T] -> [G, RF_DEPTH, T].
+
+    op/src_a/src_b/imm_i32: stacked bank arrays [N, S, IM] int32;
+    ctx_ids: [G] int32 selecting the context for each batch tile.  One
+    pallas_call, one executable, any mix of resident kernels.
+    """
+    n_bank, n_stages, im = op.shape
+    n_tiles, rf_depth, tile = x.shape
+    assert rf_depth == RF_DEPTH and im == IM_DEPTH
+    assert ctx_ids.shape == (n_tiles,)
+    dtype = x.dtype
+
+    kernel = functools.partial(_tmfu_kernel_multi, n_stages=n_stages,
+                               dtype=dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(n_tiles,),
+            in_specs=[pl.BlockSpec((1, RF_DEPTH, tile),
+                                   lambda g, *_: (g, 0, 0))],
+            out_specs=pl.BlockSpec((1, RF_DEPTH, tile),
+                                   lambda g, *_: (g, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((RF_DEPTH, tile), dtype),
+                            pltpu.VMEM((RF_DEPTH, tile), dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, RF_DEPTH, tile), dtype),
+        interpret=interpret,
+    )(ctx_ids, op, src_a, src_b, imm_i32, x)
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))

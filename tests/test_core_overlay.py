@@ -4,9 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import area
+from repro.testing import given, settings, st
 from repro.core.area import PAPER_BY_NAME, area_eslices, throughput_gops
 from repro.core.dfg import DFG, DFGError, Node, Op
 from repro.core.frontend import build_dfg

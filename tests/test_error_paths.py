@@ -1,0 +1,118 @@
+"""Error-path tests: scheduler rejects, encoder capacity, context fallbacks.
+
+The mapping flow must fail loudly at the stage that owns the invariant:
+schedule() rejects graphs the linear pipeline cannot host, encode() rejects
+capacity overflows, make_context() rejects programs deeper than the
+configured executor, and _output_slots falls back sanely when a Program
+arrives without the compile_program side table.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dfg import DFG, DFGError, Node, Op
+from repro.core.frontend import build_dfg
+from repro.core.isa import EncodeError, IM_DEPTH, encode
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import benchmark, gradient
+from repro.core.schedule import ScheduleError, schedule
+from repro.core.vm import (_output_slots, dfg_eval, make_context,
+                           pad_inputs, vm_exec)
+
+
+# --------------------------------------------------------------- scheduler
+def test_schedule_rejects_empty_dfg():
+    # bypass DFG.build validation (which rejects unused inputs) to hit the
+    # scheduler's own emptiness guard
+    empty = DFG(name="empty", inputs=("x",), nodes={}, outputs=())
+    with pytest.raises(ScheduleError, match="empty"):
+        schedule(empty)
+
+
+def test_schedule_rejects_dead_value_mid_pipeline():
+    # 'a' is produced at stage 1 and never consumed nor output: the linear
+    # interconnect streams every result forward, so there is no legal slot.
+    nodes = {
+        "a": Node("a", Op.ADDC, ("x",), imm=1.0),
+        "b": Node("b", Op.ADDC, ("x",), imm=2.0),
+        "c": Node("c", Op.SQR, ("b",)),
+    }
+    dead = DFG(name="dead", inputs=("x",), nodes=nodes, outputs=("c",))
+    with pytest.raises(ScheduleError, match="dead value"):
+        schedule(dead)
+
+
+def test_dfg_build_rejects_dead_node_up_front():
+    with pytest.raises(DFGError, match="dead node"):
+        DFG.build("d", ["x"], [Node("a", Op.ADDC, ("x",), imm=1.0),
+                               Node("b", Op.SQR, ("x",))], ["b"])
+
+
+# ----------------------------------------------------------------- encoder
+def test_encode_rejects_instruction_memory_overflow():
+    # a single-stage fan-out wider than IM_DEPTH: every op at ASAP level 1
+    n = IM_DEPTH + 1
+    lines = [f"t{i} = x * {i + 2}" for i in range(n)]
+    # fold the fan-out back down so validation passes (dead code illegal)
+    acc = "t0"
+    for i in range(1, n):
+        lines.append(f"s{i} = {acc} + t{i}")
+        acc = f"s{i}"
+    dfg = build_dfg("wide", ["x"], "\n".join(lines), [acc])
+    with pytest.raises(EncodeError, match="instruction slots"):
+        encode(schedule(dfg))
+
+
+def test_encode_rejects_constant_table_overflow():
+    n = 10  # > CONST_DEPTH=8 immediates in one stage
+    lines = [f"t{i} = x + {i}.5" for i in range(n)]
+    acc = "t0"
+    for i in range(1, n):
+        lines.append(f"s{i} = {acc} + t{i}")
+        acc = f"s{i}"
+    dfg = build_dfg("consty", ["x"], "\n".join(lines), [acc])
+    with pytest.raises(EncodeError, match="constants"):
+        encode(schedule(dfg))
+
+
+# ------------------------------------------------------------- make_context
+def test_make_context_rejects_stage_overflow():
+    prog = compile_program(gradient()).program          # 4 stages
+    with pytest.raises(ValueError, match="stages > s_max"):
+        make_context(prog, s_max=2)
+
+
+def test_make_context_accepts_exact_fit():
+    prog = compile_program(gradient()).program
+    ctx = make_context(prog, s_max=4)
+    assert ctx.op.shape == (4, IM_DEPTH)
+
+
+# ------------------------------------------------------- _output_slots path
+def test_output_slots_default_fallback_runs_correctly():
+    """encode() without compile_program's side table: the default (last
+    n_outputs instructions of the final stage) must still match the oracle
+    for kernels whose outputs are the final stage's trailing instructions."""
+    dfg = benchmark("chebyshev")
+    prog = encode(schedule(dfg))                        # no _output_slots
+    assert not hasattr(prog, "_output_slots")
+    n = len(prog.images[-1].words)
+    np.testing.assert_array_equal(
+        _output_slots(prog), np.arange(n - prog.n_outputs, n))
+    ctx = make_context(prog)
+    rng = np.random.RandomState(2)
+    xs = [rng.uniform(-1, 1, (64,)).astype(np.float32) for _ in dfg.inputs]
+    ys = vm_exec(ctx.tree(), ctx.out_idx,
+                 pad_inputs([jnp.asarray(v) for v in xs]))
+    ref = dfg_eval(dfg, {m: jnp.asarray(v)
+                         for m, v in zip(dfg.inputs, xs)})
+    np.testing.assert_allclose(np.asarray(ys[0]),
+                               np.asarray(ref[dfg.outputs[0]]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_output_slots_side_table_wins_over_default():
+    k = compile_program(gradient())
+    np.testing.assert_array_equal(_output_slots(k.program),
+                                  k.program._output_slots)

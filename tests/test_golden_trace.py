@@ -1,0 +1,69 @@
+"""Golden test: Schedule.cycle_trace reproduces the paper's Table I exactly.
+
+The gradient kernel (Fig. 1 / Table I) on the 4-FU linear overlay: II = 11,
+FU0 streams 5 loads then issues its 4 SUBs; FU1's first load lands
+DSP_LATENCY-1 cycles after FU0's first arithmetic issue (the DSP48E1's
+3-stage internal pipeline); every subsequent iteration repeats with period
+II.  The first steady-state iteration is frozen line-by-line below.
+"""
+
+from repro.core.paper_bench import gradient
+from repro.core.schedule import DSP_LATENCY, schedule
+
+#: one full iteration of Table I — (cycle, {fu_index: activity})
+GOLDEN_ITER1 = [
+    (1, {0: "Load R0"}),
+    (2, {0: "Load R1"}),
+    (3, {0: "Load R2"}),
+    (4, {0: "Load R3"}),
+    (5, {0: "Load R4"}),
+    (6, {0: "SUB (R0 R2)"}),
+    (7, {0: "SUB (R1 R2)"}),
+    (8, {0: "SUB (R2 R3)", 1: "Load R0"}),
+    (9, {0: "SUB (R2 R4)", 1: "Load R1"}),
+    (10, {1: "Load R2"}),
+    (11, {1: "Load R3"}),
+    (12, {1: "SQR (R0 R0)"}),
+    (13, {1: "SQR (R1 R1)"}),
+    (14, {1: "SQR (R2 R2)", 2: "Load R0"}),
+    (15, {1: "SQR (R3 R3)", 2: "Load R1"}),
+    (16, {2: "Load R2"}),
+    (17, {2: "Load R3"}),
+    (18, {2: "ADD (R0 R1)"}),
+    (19, {2: "ADD (R2 R3)"}),
+    (20, {3: "Load R0"}),
+    (21, {3: "Load R1"}),
+    (22, {3: "ADD (R0 R1)"}),
+]
+
+
+def test_gradient_trace_matches_golden_line_by_line():
+    sch = schedule(gradient())
+    assert sch.ii == 11
+    got = sch.cycle_trace(n_iters=1)
+    assert len(got) == len(GOLDEN_ITER1)
+    for (gc, gacts), (wc, wacts) in zip(got, GOLDEN_ITER1):
+        assert gc == wc, f"cycle numbering diverges at {gc} vs {wc}"
+        assert gacts == wacts, f"cycle {gc}: {gacts} != {wacts}"
+
+
+def test_fu1_first_load_at_dsp_latency_offset():
+    """FU1 starts loading DSP_LATENCY-1 cycles after FU0's first issue."""
+    sch = schedule(gradient())
+    rows = dict(sch.cycle_trace(n_iters=1))
+    fu0_first_issue = min(c for c, a in rows.items()
+                          if 0 in a and not a[0].startswith("Load"))
+    fu1_first_load = min(c for c, a in rows.items() if 1 in a)
+    assert fu0_first_issue == 6                    # 5 loads then first SUB
+    assert fu1_first_load == fu0_first_issue + DSP_LATENCY - 1 == 8
+
+
+def test_trace_is_periodic_with_ii():
+    sch = schedule(gradient())
+    rows = dict(sch.cycle_trace(n_iters=3))
+    ii = sch.ii
+    for c, acts in GOLDEN_ITER1:
+        for k in (1, 2):
+            shifted = rows.get(c + k * ii, {})
+            for fu, act in acts.items():
+                assert shifted.get(fu) == act, (c, k, fu)

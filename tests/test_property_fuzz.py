@@ -1,0 +1,144 @@
+"""Property/fuzz tests: random DFGs through the whole mapping flow.
+
+Random straight-line kernels are compiled (schedule -> encode -> context)
+and executed on every backend; results must match the dfg_eval oracle
+BIT-FOR-BIT on f32 — the VM performs the same elementwise f32 ops in the
+same order, so there is no legitimate source of drift.  Covers the jnp VM,
+the Pallas TMFU kernel (interpret mode), and the multi-context bank path.
+
+Runs with or without hypothesis installed (repro.testing falls back to a
+seeded-random strategy shim).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.frontend import build_dfg
+from repro.core.isa import EncodeError, encode
+from repro.core.overlay import Overlay, compile_program
+from repro.core.schedule import schedule
+from repro.core.vm import dfg_eval, make_context, pad_inputs, vm_exec
+from repro.kernels.tmfu import tmfu_pipeline
+from repro.testing import given, settings, st
+
+
+def random_dfg(seed: int, max_stmts: int = 16, name: str = "fuzz"):
+    """A random valid straight-line kernel (dead code folded into output)."""
+    rng = np.random.RandomState(seed)
+    n_in = int(rng.randint(1, 6))
+    n_stmt = int(rng.randint(1, max_stmts + 1))
+    names = [f"x{i}" for i in range(n_in)]
+    used: set = set()
+    lines = []
+    for i in range(n_stmt):
+        op = rng.choice(["+", "-", "*"])
+        a = names[rng.randint(len(names))]
+        used.add(a)
+        if rng.rand() < 0.3:
+            b = str(rng.randint(1, 9))
+        else:
+            b = names[rng.randint(len(names))]
+            used.add(b)
+        t = f"t{i}"
+        lines.append(f"{t} = {a} {op} {b}")
+        names.append(t)
+    out = f"t{n_stmt - 1}"
+    for j, d in enumerate(n for n in names[:-1] if n not in used):
+        lines.append(f"f{j} = {out} + {d}")
+        out = f"f{j}"
+    dfg = build_dfg(name, [f"x{i}" for i in range(n_in)],
+                    "\n".join(lines), [out])
+    return dfg
+
+
+def _compile_or_none(dfg):
+    """None when the kernel legally exceeds FU capacity (not a bug)."""
+    try:
+        encode(schedule(dfg))
+    except EncodeError:
+        return None
+    return compile_program(dfg)
+
+
+def _inputs(dfg, seed, batch=128):
+    rng = np.random.RandomState(seed ^ 0x5A5A)
+    return [rng.uniform(-1.5, 1.5, (batch,)).astype(np.float32)
+            for _ in dfg.inputs]
+
+
+def _oracle(dfg, xs):
+    ref = dfg_eval(dfg, {n: jnp.asarray(v)
+                         for n, v in zip(dfg.inputs, xs)})
+    return [np.asarray(ref[o]) for o in dfg.outputs]
+
+
+# ----------------------------------------------------------------- jnp VM
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_fuzz_jnp_vm_bitexact(seed):
+    dfg = random_dfg(seed)
+    k = _compile_or_none(dfg)
+    if k is None:
+        return
+    ov = Overlay(s_max=max(16, dfg.depth))
+    ctx = ov.load(k)
+    xs = _inputs(dfg, seed)
+    ys = ov(ctx, xs)
+    for y, want in zip(ys, _oracle(dfg, xs)):
+        np.testing.assert_array_equal(np.asarray(y), want)
+
+
+# ------------------------------------------------------- pallas (interpret)
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_fuzz_pallas_interpret_bitexact(seed):
+    dfg = random_dfg(seed, max_stmts=12)
+    k = _compile_or_none(dfg)
+    if k is None or dfg.depth > 16:
+        return
+    ctx = make_context(k.program, dtype=jnp.float32)
+    xs = _inputs(dfg, seed)
+    x = pad_inputs([jnp.asarray(v) for v in xs])
+    got = tmfu_pipeline(ctx, x, block_batch=128, interpret=True)
+    for j, want in enumerate(_oracle(dfg, xs)):
+        np.testing.assert_array_equal(np.asarray(got[j]), want)
+
+
+# ------------------------------------------------------- multi-context bank
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_fuzz_multi_context_dispatch_bitexact(seed):
+    """A bank of random kernels served as one mixed batch == per-kernel VM."""
+    rng = np.random.RandomState(seed ^ 0xBEEF)
+    kernels = []
+    i = 0
+    while len(kernels) < 4:
+        dfg = random_dfg(int(rng.randint(2 ** 31)), max_stmts=10,
+                         name=f"fz{seed}_{i}")
+        i += 1
+        k = _compile_or_none(dfg)
+        if k is not None and dfg.depth <= 16:
+            kernels.append(k)
+    ov = Overlay()
+    bank = ov.load_many(kernels)
+    reqs = []
+    for j, k in enumerate(kernels * 2):
+        # batch widths from a small pool so dispatch's pow2 tile buckets
+        # repeat across examples (retraces would dominate the runtime)
+        xs = _inputs(k.dfg, seed + j,
+                     batch=int(rng.choice([33, 64, 128, 200])))
+        reqs.append((k, xs))
+    outs = ov.dispatch(bank, reqs)
+    for (k, xs), ys in zip(reqs, outs):
+        for y, want in zip(ys, _oracle(k.dfg, xs)):
+            np.testing.assert_array_equal(np.asarray(y), want)
+    # the bank path must also agree bit-for-bit with the single-context VM
+    # (one fixed batch width, so the solo executor compiles exactly once)
+    k = kernels[0]
+    xs = _inputs(k.dfg, seed, batch=128)
+    ctx = ov.load(k)
+    solo = vm_exec(ctx.tree(), ctx.out_idx,
+                   pad_inputs([jnp.asarray(v) for v in xs]))
+    [ys] = ov.dispatch(bank, [(k, xs)])
+    for j, y in enumerate(ys):
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(solo[j]))

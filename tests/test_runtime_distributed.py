@@ -10,9 +10,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, MemmapCorpus, SyntheticCorpus
+from repro.testing import given, settings, st
 from repro.distributed import checkpoint as C
 from repro.distributed.elastic import accumulate_with_deadline
 from repro.runtime import optim as O
