@@ -6,9 +6,19 @@ request (``Overlay.load`` each call) and by orders of magnitude (b) the
 vendor-flow analogue (``spatial_jit``: fresh XLA trace + compile per
 kernel).  Reports requests/sec over a mixed-kernel workload.
 
-Run: PYTHONPATH=src python -m benchmarks.multi_tenant
+``--percentiles`` runs the latency study instead: a >= 4-tenant mixed
+workload served twice through identical round schedules — once with the
+pipelined streaming drain (``OverlayServer.flush``: round N+1 assembles on
+the host while round N executes on device) and once with the synchronous
+barrier drain (``flush_sync``) — reporting wall-clock, p50/p95/p99
+delivery latency, and Jain's fairness index over per-tenant mean latency.
+The pipelined path must win on wall-clock (asserted).
+
+Run: PYTHONPATH=src python -m benchmarks.multi_tenant [--percentiles]
+Reading the output: docs/SERVING.md#reading-the-benchmark.
 """
 
+import argparse
 import time
 
 import jax
@@ -87,6 +97,129 @@ def bench_spatial_recompile(reqs) -> float:
     return RECOMPILE_REQUESTS / (time.perf_counter() - t0)
 
 
+# ------------------------------------------------- latency percentile study
+N_TENANTS = 6                        # acceptance bar asks for >= 4
+PCT_BATCHES = (64, 128, 256)         # host-assembly-heavy request mix
+PCT_REPS = 5                         # paired reps; min-wall comparison
+
+
+def _tenant_workload(kernels, reqs_per_tenant=100, seed=0):
+    """Multi-tenant mix: disjoint kernel subsets, varied request sizes.
+
+    Many small requests make round assembly (host-side concat/pack) a real
+    cost — exactly the work the pipelined drain hides under device
+    execution and the synchronous drain serializes after its barrier.
+    """
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    plan = []                      # (tenant, kernel, xs) in submission order
+    for j in range(reqs_per_tenant):
+        for t in range(N_TENANTS):
+            subset = names[t::N_TENANTS]
+            k = kernels[subset[j % len(subset)]]
+            b = int(PCT_BATCHES[rng.randint(len(PCT_BATCHES))])
+            xs = [rng.uniform(-2, 2, (b,)).astype(np.float32)
+                  for _ in k.dfg.inputs]
+            plan.append((f"tenant{t}", k, xs))
+    return plan
+
+
+def _make_server(kernels):
+    # bank holds every kernel (no eviction noise); rounds of 3 kernels so a
+    # drain is several rounds deep — the pipelined path needs rounds to
+    # overlap, the sync path pays a host/device barrier per round; the DRR
+    # quantum splits each tenant's backlog across rounds
+    return OverlayServer(bank_capacity=len(kernels), round_kernels=3,
+                         max_inflight=3, quantum_tiles=48)
+
+
+def _jain(values) -> float:
+    """Jain's fairness index: 1.0 = perfectly even across tenants."""
+    x = np.asarray(list(values), np.float64)
+    return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
+
+
+def _drain_metrics(srv, drain, workload) -> tuple[float, dict]:
+    srv.reset_metrics()
+    for tenant, k, xs in workload:
+        srv.submit(k, xs, tenant=tenant)
+    t0 = time.perf_counter()
+    results = drain()
+    _block(list(results.values()))
+    wall = time.perf_counter() - t0
+    per_tenant: dict[str, list] = {}
+    for t, lat in srv.latencies().items():
+        per_tenant.setdefault(srv.record(t)["tenant"], []).append(lat)
+    pct = srv.latency_percentiles()
+    return wall, {"p50_ms": pct["p50"] * 1e3, "p95_ms": pct["p95"] * 1e3,
+                  "p99_ms": pct["p99"] * 1e3,
+                  "fairness": _jain(np.mean(v)
+                                    for v in per_tenant.values())}
+
+
+def bench_latency(kernels, reqs_per_tenant=100, reps=PCT_REPS):
+    """Paired pipelined-vs-sync drain study over one tenant workload.
+
+    Reps alternate sync/pipelined so machine drift hits both equally; the
+    wall-clock comparison uses best-of-reps (min), which isolates the
+    structural cost difference from shared-runner noise.
+    """
+    workload = _tenant_workload(kernels, reqs_per_tenant)
+    srv_pipe, srv_sync = _make_server(kernels), _make_server(kernels)
+    for srv, drain in ((srv_pipe, srv_pipe.flush),
+                       (srv_sync, srv_sync.flush_sync)):
+        for tenant, k, xs in workload:   # warmup: compiles bucket family
+            srv.submit(k, xs, tenant=tenant)
+        drain()
+    walls = {"pipelined": [], "sync": []}
+    metrics = {"pipelined": [], "sync": []}
+    for _rep in range(reps):
+        for mode, srv, drain in (("sync", srv_sync, srv_sync.flush_sync),
+                                 ("pipelined", srv_pipe, srv_pipe.flush)):
+            wall, m = _drain_metrics(srv, drain, workload)
+            walls[mode].append(wall)
+            metrics[mode].append(m)
+    rows = []
+    rounds = {"pipelined": srv_pipe.n_rounds, "sync": srv_sync.n_rounds}
+    for mode in ("pipelined", "sync"):
+        # wall: best-of-reps (structural cost, noise-insensitive);
+        # percentiles/fairness: median across reps (not just the last)
+        med = {k: float(np.median([m[k] for m in metrics[mode]]))
+               for k in metrics[mode][0]}
+        rows.append({"mode": mode, "wall_s": min(walls[mode]), **med,
+                     "requests": len(workload),
+                     "rounds_per_drain": rounds[mode] // (reps + 1)})
+    return rows
+
+
+def percentiles_main(reqs_per_tenant=100, tolerance=1.0):
+    """Latency study; asserts ``pipe_wall < sync_wall * tolerance``.
+
+    ``tolerance`` > 1 loosens the win assertion for noisy shared runners
+    (CI smoke) where host and 'device' compete for the same few cores;
+    keep the default strict 1.0 on dedicated hardware.
+    """
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    rows = bench_latency(kernels, reqs_per_tenant)
+    print("mode,wall_s,p50_ms,p95_ms,p99_ms,fairness_index,requests,"
+          "rounds_per_drain")
+    for r in rows:
+        print(f"{r['mode']},{r['wall_s']:.4f},{r['p50_ms']:.2f},"
+              f"{r['p95_ms']:.2f},{r['p99_ms']:.2f},{r['fairness']:.3f},"
+              f"{r['requests']},{r['rounds_per_drain']}")
+    pipe, sync = rows
+    print(f"# pipelined vs sync drain wall-clock (best of {PCT_REPS}): "
+          f"{sync['wall_s'] / pipe['wall_s']:.2f}x "
+          f"({N_TENANTS} tenants, {pipe['requests']} requests, "
+          f"{pipe['rounds_per_drain']} rounds/drain)")
+    assert pipe["wall_s"] < sync["wall_s"] * tolerance, (
+        "pipelined drain did not beat synchronous drain",
+        pipe["wall_s"], sync["wall_s"], tolerance)
+    assert pipe["fairness"] > 0.5, ("tenant latency grossly unfair",
+                                    pipe["fairness"])
+
+
 def run():
     kernels = {n: compile_program(benchmark(n))
                for n in BENCH_NAMES + ("gradient",)}
@@ -101,7 +234,19 @@ def run():
             rows, rps_bank, rps_load, rps_jit, retraces)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--percentiles", action="store_true",
+                    help="latency percentile + fairness study "
+                         "(pipelined vs synchronous drain)")
+    ap.add_argument("--requests-per-tenant", type=int, default=100,
+                    help="per-tenant request count for --percentiles")
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="win-assertion slack for --percentiles on noisy "
+                         "shared runners (pipe < sync * tolerance)")
+    args = ap.parse_args(argv)
+    if args.percentiles:
+        return percentiles_main(args.requests_per_tenant, args.tolerance)
     header, rows, rps_bank, rps_load, rps_jit, retraces = run()
     print(",".join(header))
     for r in rows:

@@ -13,6 +13,26 @@ Residency is managed LRU: loading a kernel into a full bank evicts the
 least-recently-used resident and reuses its slot id.  All updates are
 functional (``.at[slot].set``) — the executor never recompiles, only the
 instruction data moves, mirroring the daisy-chain context load.
+
+Pipeline-safety hooks for the async serving engine
+(``launch.serve.OverlayServer``):
+
+* ``pin`` / ``unpin`` — refcounted eviction guards.  The engine pins every
+  context referenced by an in-flight round between ``Overlay.plan`` (slot
+  assignment) and ``Overlay.collect`` (result delivery), so planning round
+  N+1 can never reassign a slot that round N's device launch is about to
+  read.  Eviction skips pinned slots; a load that finds no evictable slot
+  raises ``BankError`` instead of corrupting an in-flight round.
+* ``prefetch`` — batch warm-up: make a working set resident ahead of
+  traffic (e.g. a known-hot tenant before opening the queue).  Inside the
+  engine the same effect falls out of ``Overlay.plan`` itself: plan's
+  loads for round N+1 are issued while round N still executes, and JAX's
+  async dispatch overlaps the ``.at[slot].set`` context writes with the
+  running launch.
+* ``evictable_capacity`` — how many slots a new round may claim (free +
+  resident-but-unpinned, optionally excluding keys the caller will pin);
+  the engine retires in-flight rounds until the next round's new contexts
+  fit.
 """
 
 from __future__ import annotations
@@ -99,6 +119,8 @@ class ContextBank:
         #: device arrays of every kernel ever seen
         self._ctx_cache: OrderedDict[tuple[str, str], object] = OrderedDict()
         self._ctx_cache_cap = 4 * capacity
+        #: eviction guards: context_key -> pin refcount (see ``pin``)
+        self._pins: dict[tuple[str, str], int] = {}
         self.n_loads = 0
         self.n_evictions = 0
         self.n_hits = 0
@@ -129,6 +151,67 @@ class ContextBank:
 
     def meta(self, slot: int) -> dict:
         return self._meta[slot]
+
+    # -------------------------------------------------------------- pinning
+    def pin(self, kernel) -> int:
+        """Make ``kernel`` resident and guard it against eviction.
+
+        Pins are refcounted: every ``pin`` must be balanced by an ``unpin``.
+        The async engine pins a round's contexts at plan time and unpins at
+        collect time, so a context can never be evicted (its slot reused by
+        another tenant) while a launch referencing that slot is in flight.
+        Returns the slot id.
+        """
+        slot = self.load(kernel)
+        key = context_key(getattr(kernel, "program", kernel))
+        self._pins[key] = self._pins.get(key, 0) + 1
+        return slot
+
+    def unpin(self, kernel) -> None:
+        """Release one pin on ``kernel`` (refcounted; see ``pin``)."""
+        key = context_key(getattr(kernel, "program", kernel))
+        n = self._pins.get(key, 0)
+        if n <= 0:
+            raise BankError(f"unpin without matching pin: {key[0]}")
+        if n == 1:
+            del self._pins[key]
+        else:
+            self._pins[key] = n - 1
+
+    def is_pinned(self, kernel) -> bool:
+        key = context_key(getattr(kernel, "program", kernel))
+        return self._pins.get(key, 0) > 0
+
+    @property
+    def n_pinned(self) -> int:
+        """Number of distinct pinned resident contexts."""
+        return len(self._pins)
+
+    def evictable_capacity(self, excluding=()) -> int:
+        """Slots a newcomer working set may claim: free + unpinned residents.
+
+        ``excluding`` (context keys) removes residents the caller intends
+        to keep — e.g. the serving engine excludes the next round's own
+        resident kernels, since those will be pinned rather than evicted.
+        The engine checks this before planning a round and retires
+        in-flight rounds (dropping their pins) until the round's new
+        contexts fit.
+        """
+        ex = set(excluding)
+        return len(self._free) + sum(1 for k in self._lru
+                                     if self._pins.get(k, 0) == 0
+                                     and k not in ex)
+
+    def prefetch(self, kernels) -> list[int]:
+        """Warm-up hook: make a working set resident ahead of traffic.
+
+        Functionally ``load`` per kernel (LRU rules apply — the set may
+        evict colder residents, never pinned ones); returns the slot ids.
+        Useful before opening a queue to a known-hot tenant, or from any
+        caller that wants context writes issued while earlier launches
+        still execute (JAX async dispatch overlaps them with compute).
+        """
+        return [self.load(k) for k in kernels]
 
     # ----------------------------------------------------------------- load
     def load(self, kernel) -> int:
@@ -164,7 +247,16 @@ class ContextBank:
         if self._free:
             slot = self._free.pop(0)
         else:
-            _evicted, slot = self._lru.popitem(last=False)
+            # evict the least-recently-used UNPINNED resident; pinned slots
+            # belong to in-flight rounds and must keep their contents
+            victim = next((k for k in self._lru
+                           if self._pins.get(k, 0) == 0), None)
+            if victim is None:
+                raise BankError(
+                    f"{name}: bank full and all {self.capacity} resident "
+                    f"contexts are pinned; retire in-flight rounds (unpin) "
+                    f"before loading new tenants")
+            slot = self._lru.pop(victim)
             del self._meta[slot]
             self.n_evictions += 1
         self.op = self.op.at[slot].set(ctx.op)
@@ -189,4 +281,4 @@ class ContextBank:
     def stats(self) -> dict:
         return {"capacity": self.capacity, "resident": len(self),
                 "loads": self.n_loads, "evictions": self.n_evictions,
-                "hits": self.n_hits}
+                "hits": self.n_hits, "pinned": self.n_pinned}

@@ -12,6 +12,21 @@ instruction words + constant tables move; the XLA executable is untouched.
 into a fresh XLA program (1 HLO op per DFG node) and must be recompiled per
 kernel.  benchmarks/context_switch.py and benchmarks/area_analogue.py
 measure the two against each other.
+
+Multi-tenant dispatch is a STAGED PIPELINE so a serving engine can overlap
+the host-side work of one round with the device execution of another::
+
+    plan     = ov.plan(bank, requests)     # residency + tile layout (host)
+    batch    = ov.assemble(plan)           # one [G,RF,tile] host buffer
+    ys       = ov.execute(bank, batch)     # async device launch, NO block
+    outs     = ov.collect(plan, ys)        # slice per request (lazy)
+
+``Overlay.dispatch`` is exactly ``collect(execute(assemble(plan)))`` — the
+synchronous composition is the bit-for-bit oracle for the async engine in
+``launch.serve.OverlayServer``, which interleaves the stages of successive
+rounds.  ``plan(..., pin=True)`` pins every referenced context in the bank
+until ``plan.release(bank)``, so a later round's planning can never evict
+a context out from under an in-flight launch (see ``core.bank``).
 """
 
 from __future__ import annotations
@@ -42,6 +57,50 @@ class CompiledKernel:
     dfg: DFG
     sched: Schedule
     program: Program
+
+
+@dataclasses.dataclass
+class _GroupSpec:
+    """Tile layout of one kernel group inside a dispatch round."""
+
+    key: tuple                # context identity (bank.context_key)
+    idxs: list                # request indices, submission order
+    kernel: CompiledKernel
+    slot: int                 # bank slot the group's tiles select
+    lens: list                # per-request batch lengths
+    total: int                # sum(lens)
+    n_tiles: int              # ceil(total / tile)
+    start: int                # first row of this group in the tile stack
+
+
+@dataclasses.dataclass
+class DispatchPlan:
+    """Host-side layout of one mixed-kernel round (output of ``plan``).
+
+    Carries everything ``assemble``/``collect`` need to build the tile
+    stack and slice results back out, plus the request list itself so the
+    stages cannot be fed mismatched arguments.  When built with
+    ``pin=True`` the referenced contexts are pinned in the bank; call
+    ``release(bank)`` exactly once after ``collect`` (or on abandon).
+    """
+
+    tile: int
+    requests: list            # the [(CompiledKernel, xs)] pairs, verbatim
+    groups: list              # [_GroupSpec]
+    g_total: int              # live tile rows
+    g_pad: int                # pow2-padded tile rows (executable bucket)
+    pinned: bool = False
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.groups)
+
+    def release(self, bank: ContextBank) -> None:
+        """Drop this plan's eviction pins (no-op for unpinned plans)."""
+        if self.pinned:
+            self.pinned = False
+            for g in self.groups:
+                bank.unpin(g.kernel)
 
 
 def compile_program(dfg: DFG) -> CompiledKernel:
@@ -101,27 +160,24 @@ class Overlay:
             bank.load(k)
         return bank
 
-    def dispatch(self, bank: ContextBank, requests, tile: int = DISPATCH_TILE):
-        """Serve a mixed-kernel batch through the bank in one launch family.
+    def plan(self, bank: ContextBank, requests, tile: int = DISPATCH_TILE,
+             pin: bool = False) -> DispatchPlan:
+        """Stage 1/4 — residency + tile layout for a mixed-kernel round.
 
         ``requests`` is a list of ``(CompiledKernel, xs)`` pairs (``xs`` a
         list of 1-D input arrays, all the same length within a request).
-        Requests are grouped by kernel, each group's batch is padded to the
-        ``tile`` boundary and split into fixed-width tiles, and the whole
-        mixed tile stack runs through ``vm_exec_multi`` as one call — the
-        context switch between tiles is a gathered index.  The tile count is
-        padded to the next power of two so repeated mixed workloads land in
-        a handful of executable buckets (zero retraces after warmup).
+        Requests are grouped by context CONTENT (not name: two distinct
+        programs sharing a name must never be served from one slot), every
+        group's kernel is made bank-resident (this is the prefetch point —
+        the device context writes overlap whatever is already executing),
+        and each group gets a run of fixed-width tile rows.  The round may
+        reference at most ``bank.capacity`` distinct kernels; larger
+        working sets are split into rounds by ``launch.serve``.
 
-        Returns one output list per request, in request order.  The batch
-        may reference at most ``bank.capacity`` distinct kernels; queues
-        with larger working sets are round-robined by
-        ``launch.serve.OverlayServer``.
+        With ``pin=True`` each referenced context is refcount-pinned until
+        ``DispatchPlan.release(bank)`` — required whenever another round
+        may load contexts between this plan and its ``execute``.
         """
-        if not requests:
-            return []
-        # group by context CONTENT, not name: two distinct programs sharing
-        # a name must never be served from one slot
         groups: OrderedDict[tuple, list[int]] = OrderedDict()
         for i, (k, _) in enumerate(requests):
             groups.setdefault(context_key(k.program), []).append(i)
@@ -130,67 +186,143 @@ class Overlay:
                 f"batch references {len(groups)} kernels > bank capacity "
                 f"{bank.capacity}; split into rounds (see OverlayServer)")
 
-        # first pass: residency + tile layout per group
-        specs = []        # (key, idxs, kern, slot, lens, total, n_tiles, start)
+        specs: list[_GroupSpec] = []
         g_total = 0
-        for key, idxs in groups.items():
-            kern = requests[idxs[0]][0]
-            slot = bank.load(kern)
-            lens = [int(np.shape(requests[i][1][0])[0]) for i in idxs]
-            total = sum(lens)
-            n_tiles = -(-total // tile)
-            specs.append((key, idxs, kern, slot, lens, total, n_tiles,
-                          g_total))
-            g_total += n_tiles
+        try:
+            for key, idxs in groups.items():
+                kern = requests[idxs[0]][0]
+                slot = bank.pin(kern) if pin else bank.load(kern)
+                lens = [int(np.shape(requests[i][1][0])[0]) for i in idxs]
+                total = sum(lens)
+                n_tiles = -(-total // tile)
+                specs.append(_GroupSpec(key=key, idxs=idxs, kernel=kern,
+                                        slot=slot, lens=lens, total=total,
+                                        n_tiles=n_tiles, start=g_total))
+                g_total += n_tiles
+        except BankError:
+            # unwind pins already taken by this (never-returned) plan — a
+            # caller can't release() a plan it never got
+            if pin:
+                for g in specs:
+                    bank.unpin(g.kernel)
+            raise
+        g_pad = 1 << (g_total - 1).bit_length() if g_total else 0
+        return DispatchPlan(tile=tile, requests=list(requests), groups=specs,
+                            g_total=g_total, g_pad=g_pad, pinned=pin)
 
-        if g_total == 0:
-            # every request in the batch was zero-length: nothing to launch
-            return [[jnp.zeros((0,), self.dtype) for _ in k.dfg.outputs]
-                    for k, _ in requests]
+    def assemble(self, plan: DispatchPlan):
+        """Stage 2/4 — build the round's host tile stack.
 
-        # second pass: assemble the whole [G_pad, RF_DEPTH, tile] batch in
-        # ONE host buffer (a single device transfer — the hot serving path
-        # must not pay per-group/per-tile device dispatches), padding the
-        # tile count to a power-of-two bucket with replicas of tile 0
+        Packs every request into ONE ``[G_pad, RF_DEPTH, tile]`` host
+        buffer (a single device transfer — the hot serving path must not
+        pay per-group/per-tile dispatches) plus the per-tile context-id
+        vector.  The tile count is padded to the next power of two with
+        replicas of tile 0 so repeated mixed workloads land in a handful
+        of executable buckets (zero retraces after warmup).
+
+        Pure host work (numpy): in the async engine this stage runs for
+        round N+1 while round N executes on device.  Returns
+        ``(id_arr, x_stack)`` on device, or ``None`` when the round is
+        all zero-length requests (nothing to launch).
+        """
+        if plan.g_total == 0:
+            return None
         np_dtype = np.dtype(self.dtype)
-        g_pad = 1 << (g_total - 1).bit_length()
-        x_np = np.zeros((g_pad, RF_DEPTH, tile), np_dtype)
-        ids_np = np.zeros(g_pad, np.int32)
-        layout: dict[tuple, tuple[int, int, list[int]]] = {}
-        for key, idxs, kern, slot, lens, total, n_tiles, start in specs:
-            layout[key] = (start, n_tiles, lens)
-            if n_tiles == 0:
+        tile = plan.tile
+        x_np = np.zeros((plan.g_pad, RF_DEPTH, tile), np_dtype)
+        ids_np = np.zeros(plan.g_pad, np.int32)
+        for g in plan.groups:
+            if g.n_tiles == 0:
                 continue
-            n_in = len(kern.dfg.inputs)
-            buf = np.zeros((n_in, n_tiles * tile), np_dtype)
+            n_in = len(g.kernel.dfg.inputs)
+            buf = np.zeros((n_in, g.n_tiles * tile), np_dtype)
             for j in range(n_in):
-                buf[j, :total] = np.concatenate(
-                    [np.asarray(requests[i][1][j], np_dtype) for i in idxs])
-            x_np[start:start + n_tiles, :n_in, :] = \
-                buf.reshape(n_in, n_tiles, tile).transpose(1, 0, 2)
-            ids_np[start:start + n_tiles] = slot
-        x_np[g_total:] = x_np[0]
-        ids_np[g_total:] = ids_np[0]
-        x_stack = jnp.asarray(x_np)
-        id_arr = jnp.asarray(ids_np)
+                buf[j, :g.total] = np.concatenate(
+                    [np.asarray(plan.requests[i][1][j], np_dtype)
+                     for i in g.idxs])
+            x_np[g.start:g.start + g.n_tiles, :n_in, :] = \
+                buf.reshape(n_in, g.n_tiles, tile).transpose(1, 0, 2)
+            ids_np[g.start:g.start + g.n_tiles] = g.slot
+        x_np[plan.g_total:] = x_np[0]
+        ids_np[plan.g_total:] = ids_np[0]
+        return jnp.asarray(ids_np), jnp.asarray(x_np)
 
+    def execute(self, bank: ContextBank, batch):
+        """Stage 3/4 — launch the round on device; does NOT block.
+
+        Snapshots the bank's stacked instruction arrays at call time (the
+        arrays are immutable — later ``bank.load`` writes produce NEW
+        arrays, so an in-flight launch is never disturbed) and issues one
+        ``vm_exec_multi`` / ``tmfu_pipeline_multi`` call.  JAX dispatch is
+        asynchronous: the returned ``[G_pad, max_outputs, tile]`` array is
+        a future; only ``jax.block_until_ready`` (the engine's delivery
+        point) waits on it.  Slot validity between ``plan`` and this call
+        is the caller's contract — hold plan pins if any other round may
+        touch the bank in between.
+        """
+        if batch is None:
+            return None
+        id_arr, x_stack = batch
         if self.backend == "pallas":
             from repro.kernels.tmfu import ops as tmfu_ops
-            ys = tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack)
-        else:
-            ys = vm.vm_exec_multi(bank.tree(), bank.out_idx, id_arr, x_stack)
+            return tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack)
+        return vm.vm_exec_multi(bank.tree(), bank.out_idx, id_arr, x_stack)
 
-        results: list[list[jax.Array] | None] = [None] * len(requests)
-        for key, idxs in groups.items():
-            start, n_tiles, lens = layout[key]
-            n_out = len(requests[idxs[0]][0].dfg.outputs)
-            block = ys[start:start + n_tiles]          # [nt, max_out, tile]
-            flat = jnp.moveaxis(block, 1, 0).reshape(ys.shape[1], -1)
+    def collect(self, plan: DispatchPlan, ys, host: bool = False):
+        """Stage 4/4 — slice the round's result stack back per request.
+
+        Two delivery modes:
+
+        * ``host=False`` (the ``dispatch`` default): the slices are lazy
+          device ops on the (possibly still executing) result array —
+          nothing blocks, results stay ``jax.Array``.
+        * ``host=True`` (the streaming engine's delivery path): ``ys``
+          must already be ready (the engine just blocked on it); the
+          stack is read back once, each group output is flattened into
+          one contiguous buffer (the only copy — tiles interleave
+          requests, so a flatten is unavoidable), and per-request slices
+          are numpy VIEWS of it — no per-request device-op dispatch or
+          copy on the hot path.
+
+        Returns one output list per request, in request order; both modes
+        yield bit-identical values.
+        """
+        if ys is None:
+            return [[jnp.zeros((0,), self.dtype) for _ in k.dfg.outputs]
+                    for k, _ in plan.requests]
+        if host:
+            ys = np.asarray(ys)
+        results: list = [None] * len(plan.requests)
+        for g in plan.groups:
+            n_out = len(g.kernel.dfg.outputs)
+            block = ys[g.start:g.start + g.n_tiles]    # [nt, max_out, tile]
+            if host:
+                # one contiguous flatten per LIVE output row (not the
+                # padded max_outputs); requests then slice views of it
+                flats = [np.ascontiguousarray(block[:, j, :]).reshape(-1)
+                         for j in range(n_out)]
+            else:
+                flat = jnp.moveaxis(block, 1, 0).reshape(ys.shape[1], -1)
+                flats = [flat[j] for j in range(n_out)]
             off = 0
-            for i, n in zip(idxs, lens):
-                results[i] = [flat[j, off:off + n] for j in range(n_out)]
+            for i, n in zip(g.idxs, g.lens):
+                results[i] = [flats[j][off:off + n] for j in range(n_out)]
                 off += n
         return results
+
+    def dispatch(self, bank: ContextBank, requests, tile: int = DISPATCH_TILE):
+        """Serve a mixed-kernel batch through the bank in one launch family.
+
+        The synchronous composition of the four pipeline stages —
+        ``collect(execute(assemble(plan(...))))`` — and therefore the
+        bit-for-bit oracle for the streaming engine, which runs the same
+        stages interleaved across rounds.  Returns one output list per
+        request, in request order.
+        """
+        if not requests:
+            return []
+        p = self.plan(bank, requests, tile=tile)
+        return self.collect(p, self.execute(bank, self.assemble(p)))
 
     # ------------------------------------------------------------ timing
     def time_context_switch(self, kernel: CompiledKernel,

@@ -1,4 +1,4 @@
-"""Serving launchers: LM prefill/decode loop + the overlay request engine.
+"""Serving launchers: LM prefill/decode loop + the async overlay engine.
 
 LM serving (prefill + greedy decode)::
 
@@ -9,19 +9,101 @@ Multi-tenant overlay serving (the paper's one-pipeline-many-kernels claim
 at request scale)::
 
   python -m repro.launch.serve --overlay-demo --bank 4 --requests 64
+  python -m repro.launch.serve --overlay-demo --stream --tenants 4
+
+``OverlayServer`` is an ASYNC STREAMING engine over the staged dispatch
+pipeline (``Overlay.plan/assemble/execute/collect``, see core/overlay.py):
+
+* ``submit`` returns a ticket immediately; results are retrieved with
+  ``result(ticket)``, the ``as_completed()`` iterator (completion order,
+  not barrier order), or a bulk ``flush()``.
+* Rounds are PIPELINED: while round N executes on device, round N+1's
+  host tile stack is assembled and its contexts prefetched into the bank
+  (JAX dispatch is async — ``jax.block_until_ready`` happens only at
+  result delivery).  ``flush_sync()`` keeps the old drain-the-queue
+  barrier loop as the bit-for-bit oracle and benchmark baseline.
+* Scheduling policy: per-tenant token-bucket ADMISSION CONTROL (``submit``
+  raises ``AdmissionError`` when a tenant exceeds its rate) and
+  deficit-round-robin across tenants when forming rounds, so a hot tenant
+  with a bank-resident working set cannot starve cold tenants.
+* In-flight rounds pin their contexts in the ``ContextBank`` so LRU
+  eviction can never reassign a slot under a launched round.
+
+See docs/SERVING.md for the full guide.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import sys
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: tenant label used when ``submit`` is not given one
+DEFAULT_TENANT = "default"
+
+
+class AdmissionError(RuntimeError):
+    """A tenant exceeded its token-bucket rate.
+
+    ``retry_after`` is the seconds until the request would be admitted —
+    ``math.inf`` when the request's cost exceeds the bucket's burst, i.e.
+    it can NEVER be admitted under the current policy (don't retry it;
+    split the request or raise the tenant's burst).
+    """
+
+    def __init__(self, tenant: str, retry_after: float):
+        if math.isinf(retry_after):
+            msg = (f"tenant {tenant!r}: request cost exceeds the bucket "
+                   f"burst; it can never be admitted under this policy")
+        else:
+            msg = (f"tenant {tenant!r} over admission rate; "
+                   f"retry in {retry_after:.3f}s")
+        super().__init__(msg)
+        self.tenant = tenant
+        self.retry_after = retry_after
+
+
+class TokenBucket:
+    """Token-bucket rate limiter (tokens = dispatch tiles, see SERVING.md).
+
+    ``rate`` tokens accrue per second up to ``burst``; ``try_acquire``
+    spends tokens if available.  The clock is injectable so tests can
+    advance time deterministically.
+    """
+
+    def __init__(self, rate: float, burst: float | None = None,
+                 clock=time.monotonic):
+        if rate <= 0:
+            raise ValueError(f"rate must be > 0, got {rate}")
+        self.rate = float(rate)
+        self.burst = float(burst if burst is not None else rate)
+        self.tokens = self.burst
+        self.clock = clock
+        self._t = clock()
+
+    def _refill(self) -> None:
+        now = self.clock()
+        self.tokens = min(self.burst, self.tokens + (now - self._t) * self.rate)
+        self._t = now
+
+    def try_acquire(self, cost: float = 1.0) -> bool:
+        self._refill()
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return True
+        return False
+
+    def retry_after(self, cost: float = 1.0) -> float:
+        """Seconds until ``cost`` tokens will be available."""
+        self._refill()
+        return max(0.0, (cost - self.tokens) / self.rate)
 
 
 # ===================================================== overlay request engine
@@ -32,6 +114,10 @@ class OverlayRequest:
     ticket: int
     kernel: object            # core.overlay.CompiledKernel
     xs: list                  # per-primary-input 1-D arrays, equal length
+    tenant: str = DEFAULT_TENANT
+    key: tuple = ()           # context identity (bank.context_key)
+    cost: int = 1             # dispatch tiles this request occupies
+    t_submit: float = 0.0
 
     @property
     def name(self) -> str:
@@ -42,79 +128,403 @@ class OverlayRequest:
         return int(np.shape(self.xs[0])[0])
 
 
-class OverlayServer:
-    """Queueing front-end over ``Overlay.dispatch`` + a ``ContextBank``.
+@dataclasses.dataclass
+class _Flow:
+    """Per-tenant FIFO queue + deficit-round-robin state."""
 
-    ``submit`` enqueues requests; ``flush`` drains the queue: requests are
-    grouped by kernel id, groups are round-robined through the bank in
-    rounds of at most ``bank.capacity`` distinct kernels (the ContextBank's
-    LRU policy evicts cold contexts when the working set exceeds the bank),
-    and each round's mixed-kernel tile stack executes as ONE call into the
-    shared executor.  Results come back in submission order.
+    queue: deque
+    deficit: float = 0.0
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """A launched-but-undelivered round of the staged pipeline."""
+
+    reqs: list                # [OverlayRequest]
+    plan: object              # core.overlay.DispatchPlan (holds the pins)
+    ys: object                # device result future, or None (empty round)
+    round_no: int
+
+
+class OverlayServer:
+    """Async streaming front-end over the staged dispatch pipeline.
+
+    Lifecycle of a request (see docs/ARCHITECTURE.md for the diagram):
+
+    1. ``submit(kernel, xs, tenant=...)`` — token-bucket admission check,
+       then enqueue on the tenant's flow; returns a ticket.
+    2. Round formation — deficit-round-robin across tenant flows picks at
+       most ``round_kernels`` distinct kernels per round; a tenant may
+       spend at most its accumulated deficit (in tiles) per round, so no
+       flow monopolises the bank.
+    3. Staged launch — ``Overlay.plan`` (pins contexts, assigns slots) →
+       ``assemble`` (host tile stack) → ``execute`` (async device call).
+       Up to ``max_inflight`` rounds run concurrently: round N+1 is
+       planned/assembled while round N executes on device.
+    4. Delivery — ``result(ticket)`` / ``as_completed()`` / ``flush()``
+       block (``jax.block_until_ready``) only on the round actually being
+       delivered; per-ticket latency is recorded at that moment.
+
+    ``flush_sync()`` serves the same queue through the one-round-at-a-time
+    barrier loop (launch, wait, deliver, repeat) — the bit-for-bit oracle
+    the tests hold the streaming path to, and the baseline the benchmark
+    must beat.
     """
 
     def __init__(self, bank_capacity: int = 8, tile: int = 128,
                  backend: str = "jnp", s_max: int = 16,
-                 dtype=jnp.float32, max_outputs: int = 8):
+                 dtype=jnp.float32, max_outputs: int = 8,
+                 max_inflight: int = 2, round_kernels: int | None = None,
+                 quantum_tiles: float | None = None,
+                 admission: dict | None = None,
+                 default_admission: tuple | None = None,
+                 clock=time.monotonic, metrics_window: int = 65536):
         from repro.core.bank import ContextBank
         from repro.core.overlay import Overlay
         self.overlay = Overlay(s_max=s_max, dtype=dtype, backend=backend)
         self.bank = ContextBank(bank_capacity, s_max=s_max, dtype=dtype,
                                 max_outputs=max_outputs)
         self.tile = tile
-        self._queue: list[OverlayRequest] = []
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = max_inflight
+        #: distinct kernels per round; <= bank capacity.  Smaller rounds
+        #: trade per-launch batching for pipeline overlap (see SERVING.md).
+        if round_kernels is not None and round_kernels < 1:
+            raise ValueError(
+                f"round_kernels must be >= 1 or None (= bank capacity), "
+                f"got {round_kernels}")
+        self.round_kernels = min(round_kernels or bank_capacity,
+                                 bank_capacity)
+        #: DRR quantum in tiles; None = unbounded (pure round-robin)
+        if quantum_tiles is not None and quantum_tiles <= 0:
+            raise ValueError(
+                f"quantum_tiles must be > 0 or None (unbounded), got "
+                f"{quantum_tiles}; a non-positive quantum can never cover "
+                f"a request's tile cost")
+        self.quantum_tiles = quantum_tiles
+        self.clock = clock
+        self._buckets: dict[str, TokenBucket] = {}
+        for tenant, spec in (admission or {}).items():
+            self._buckets[tenant] = (spec if isinstance(spec, TokenBucket)
+                                     else TokenBucket(*spec, clock=clock))
+        self.default_admission = default_admission
+        self._flows: dict[str, _Flow] = {}
+        self._rr: deque[str] = deque()      # tenant round-robin order
+        self._inflight: deque[_Inflight] = deque()
+        self._done: OrderedDict[int, list] = OrderedDict()
+        self._records: dict[int, dict] = {}
+        #: telemetry of CLAIMED tickets is kept for the last
+        #: ``metrics_window`` claims only — a long-lived server must not
+        #: grow per-request state forever
+        self.metrics_window = metrics_window
+        self._claimed: deque[int] = deque()
+        self._default_buckets: set[str] = set()
         self._next_ticket = 0
         self.n_rounds = 0
         self.n_requests = 0
 
     # ----------------------------------------------------------------- queue
-    def submit(self, kernel, xs) -> int:
-        """Enqueue one request; returns its ticket (= position key)."""
+    def submit(self, kernel, xs, tenant: str = DEFAULT_TENANT) -> int:
+        """Admit + enqueue one request; returns its ticket immediately.
+
+        Raises :class:`AdmissionError` (without enqueueing) when the
+        tenant's token bucket cannot cover the request's tile cost.
+        """
+        from repro.core.bank import context_key
+        xs = list(xs)
+        cost = -(-int(np.shape(xs[0])[0]) // self.tile)
+        bucket = self._buckets.get(tenant)
+        if bucket is None and self.default_admission is not None:
+            bucket = TokenBucket(*self.default_admission, clock=self.clock)
+            self._buckets[tenant] = bucket
+            self._default_buckets.add(tenant)
+            if len(self._buckets) > 4096:
+                # an unbounded tenant-label space must not leak buckets:
+                # a refilled-to-burst default bucket carries no state
+                for t in list(self._default_buckets):
+                    b = self._buckets[t]
+                    b._refill()
+                    if t != tenant and b.tokens >= b.burst:
+                        del self._buckets[t]
+                        self._default_buckets.discard(t)
+        if bucket is not None and not bucket.try_acquire(max(1, cost)):
+            retry = (math.inf if max(1, cost) > bucket.burst
+                     else bucket.retry_after(max(1, cost)))
+            raise AdmissionError(tenant, retry)
         t = self._next_ticket
         self._next_ticket += 1
-        self._queue.append(OverlayRequest(ticket=t, kernel=kernel,
-                                          xs=list(xs)))
+        req = OverlayRequest(ticket=t, kernel=kernel, xs=xs, tenant=tenant,
+                             key=context_key(kernel.program), cost=cost,
+                             t_submit=self.clock())
+        flow = self._flows.get(tenant)
+        if flow is None:
+            flow = self._flows[tenant] = _Flow(queue=deque())
+            self._rr.append(tenant)
+        flow.queue.append(req)
+        self._records[t] = {"tenant": tenant, "t_submit": req.t_submit,
+                            "cost": cost, "t_done": None, "round": None}
         return t
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        """Requests submitted but not yet delivered (queued + in flight)."""
+        queued = sum(len(f.queue) for f in self._flows.values())
+        return queued + sum(len(i.reqs) for i in self._inflight)
 
-    # ----------------------------------------------------------------- drain
+    # ------------------------------------------------------- round formation
+    def _take_from_flow(self, flow: _Flow, keys: set, cap: int) -> list:
+        """DRR service of one flow: whole kernel groups, head-first, until
+        the flow's deficit or the round's distinct-kernel budget runs out.
+
+        Untaken requests keep their ARRIVAL order in the queue (never the
+        grouped order) — a skipped kernel's old request must reach the
+        queue head ahead of newer traffic, or a live stream on one kernel
+        would starve a tenant's own requests on another.
+        """
+        taken: list[OverlayRequest] = []
+        taken_ids: set[int] = set()
+        by_key: OrderedDict[tuple, list] = OrderedDict()
+        for r in flow.queue:
+            by_key.setdefault(r.key, []).append(r)
+        exhausted = False
+        for key, rs in by_key.items():
+            if exhausted or (key not in keys and len(keys) >= cap):
+                continue
+            for r in rs:
+                if flow.deficit >= r.cost:
+                    flow.deficit -= r.cost
+                    keys.add(key)
+                    taken.append(r)
+                    taken_ids.add(r.ticket)
+                else:
+                    exhausted = True
+                    break
+        flow.queue = deque(r for r in flow.queue
+                           if r.ticket not in taken_ids)
+        if not flow.queue:
+            flow.deficit = 0.0          # standard DRR: idle flows reset
+        return taken
+
+    def _form_round(self) -> list | None:
+        """Pick the next round via deficit round-robin across tenants."""
+        # prune drained flows: a long-lived server over an unbounded
+        # tenant-label space must not scan every tenant ever seen per
+        # round (flows are recreated on the tenant's next submit)
+        for tenant in [t for t in self._rr if not self._flows[t].queue]:
+            del self._flows[tenant]
+            self._rr.remove(tenant)
+        if not self._flows:
+            return None
+        cap = self.round_kernels
+        keys: set = set()
+        round_reqs: list[OverlayRequest] = []
+        while not round_reqs:
+            for tenant in list(self._rr):
+                flow = self._flows[tenant]
+                if not flow.queue:
+                    continue
+                flow.deficit = (math.inf if self.quantum_tiles is None
+                                else flow.deficit + self.quantum_tiles)
+                round_reqs.extend(self._take_from_flow(flow, keys, cap))
+        self._rr.rotate(-1)             # a different tenant leads next round
+        return round_reqs
+
+    # ------------------------------------------------------ staged pipeline
+    def _launch_round(self, reqs: list) -> None:
+        """plan (pinned) -> assemble -> execute; delivery happens later."""
+        from repro.core.bank import BankError
+        round_kernels = {r.key: r.kernel for r in reqs}
+        needed = sum(1 for k in round_kernels.values() if k not in self.bank)
+        # retire in-flight rounds until the round's NEW contexts fit the
+        # unpinned portion of the bank; the round's own resident kernels
+        # are excluded — they will be pinned, not evicted, so their slots
+        # cannot satisfy a new context's demand
+        while self._inflight and self.bank.evictable_capacity(
+                excluding=round_kernels) < needed:
+            self._retire_oldest()
+        pairs = [(r.kernel, r.xs) for r in reqs]
+        while True:
+            try:
+                plan = self.overlay.plan(self.bank, pairs, tile=self.tile,
+                                         pin=True)
+                break
+            except BankError:
+                # belt-and-braces: plan unwinds its own pins on failure, so
+                # retiring one more round and retrying is always safe
+                if not self._inflight:
+                    raise
+                self._retire_oldest()
+        batch = self.overlay.assemble(plan)
+        ys = self.overlay.execute(self.bank, batch)
+        self._inflight.append(_Inflight(reqs=reqs, plan=plan, ys=ys,
+                                        round_no=self.n_rounds))
+        self.n_rounds += 1
+
+    def _retire_oldest(self) -> list:
+        """Deliver the oldest in-flight round; returns its tickets."""
+        inf = self._inflight.popleft()
+        if inf.ys is not None:
+            jax.block_until_ready(inf.ys)
+        # host=True: one device readback + one flatten per group output;
+        # per-request slicing is numpy views, never device-op dispatch
+        outs = self.overlay.collect(inf.plan, inf.ys, host=True)
+        now = self.clock()
+        tickets = []
+        for r, y in zip(inf.reqs, outs):
+            self._done[r.ticket] = y
+            rec = self._records[r.ticket]
+            rec["t_done"] = now
+            rec["round"] = inf.round_no
+            tickets.append(r.ticket)
+        inf.plan.release(self.bank)
+        self.n_requests += len(inf.reqs)
+        return tickets
+
+    def _fill_pipeline(self) -> None:
+        while len(self._inflight) < self.max_inflight:
+            reqs = self._form_round()
+            if reqs is None:
+                return
+            self._launch_round(reqs)
+
+    def _note_claimed(self, tickets) -> None:
+        """Record claims and prune telemetry beyond ``metrics_window``."""
+        self._claimed.extend(tickets)
+        while len(self._claimed) > self.metrics_window:
+            self._records.pop(self._claimed.popleft(), None)
+
+    # -------------------------------------------------------------- retrieve
+    def result(self, ticket: int):
+        """Block until ``ticket``'s outputs are ready and return them.
+
+        Drives the pipeline as needed; each claim pops the result (a
+        ticket can be claimed once, via ``result``/``as_completed``/
+        ``flush``).
+        """
+        if ticket not in self._records:
+            raise KeyError(f"unknown ticket {ticket}")
+        while ticket not in self._done:
+            if self._records[ticket]["t_done"] is not None:
+                raise KeyError(f"ticket {ticket} already claimed")
+            self._fill_pipeline()
+            if not self._inflight:
+                raise KeyError(f"ticket {ticket} is not queued (lost?)")
+            self._retire_oldest()
+        self._note_claimed([ticket])
+        return self._done.pop(ticket)
+
+    def as_completed(self):
+        """Yield ``(ticket, outputs)`` in COMPLETION order, streaming.
+
+        Rounds are delivered as they finish (arrival order, not the
+        submission-barrier order of ``flush``); within a round, tickets
+        come back grouped by kernel (round assembly batches per kernel),
+        in submission order within each kernel.  New ``submit`` calls
+        made while iterating are picked up — iteration ends when the
+        server is idle.
+        """
+        while True:
+            if self._done:
+                ticket, outs = self._done.popitem(last=False)
+                self._note_claimed([ticket])
+                yield ticket, outs
+                continue
+            self._fill_pipeline()
+            if not self._inflight:
+                return
+            self._retire_oldest()
+
     def flush(self) -> dict[int, list]:
-        """Serve every queued request; returns {ticket: outputs}."""
-        if not self._queue:
-            return {}
-        from repro.core.bank import context_key
-        # group by context content (same rule as Overlay.dispatch): two
-        # different programs sharing a name are distinct tenants
-        groups: OrderedDict[tuple, list[OverlayRequest]] = OrderedDict()
-        for r in self._queue:
-            groups.setdefault(context_key(r.kernel.program), []).append(r)
-        names = list(groups)
-        results: dict[int, list] = {}
-        cap = self.bank.capacity
-        for lo in range(0, len(names), cap):
-            round_reqs = [r for n in names[lo:lo + cap] for r in groups[n]]
-            outs = self.overlay.dispatch(
-                self.bank, [(r.kernel, r.xs) for r in round_reqs],
-                tile=self.tile)
-            for r, y in zip(round_reqs, outs):
-                results[r.ticket] = y
-            self.n_rounds += 1
-        self.n_requests += len(self._queue)
-        self._queue.clear()
+        """Serve everything queued; returns {ticket: outputs}.
+
+        Pipelined drain: up to ``max_inflight`` rounds overlap, so round
+        N+1's host assembly and context prefetch hide under round N's
+        device execution; the device is never left idle waiting for the
+        host between rounds (compare ``flush_sync``).
+        """
+        while True:
+            self._fill_pipeline()
+            if not self._inflight:
+                break
+            self._retire_oldest()
+        results = dict(self._done)
+        self._done.clear()
+        self._note_claimed(results)
         return results
+
+    def flush_sync(self) -> dict[int, list]:
+        """Barrier drain: one round at a time, waiting on each.
+
+        Identical round formation and dispatch math to ``flush`` — only
+        the overlap is missing, which makes this the bit-for-bit oracle
+        for the streaming path and the baseline it must beat.
+        """
+        # rounds already launched by the pipelined API belong to this
+        # drain too: deliver them first (releasing their pins) so no
+        # ticket is dropped and no pin outlives its round
+        while self._inflight:
+            self._retire_oldest()
+        results: dict[int, list] = {}
+        while (reqs := self._form_round()) is not None:
+            outs = self.overlay.dispatch(
+                self.bank, [(r.kernel, r.xs) for r in reqs], tile=self.tile)
+            jax.block_until_ready([y for ys in outs for y in ys])
+            now = self.clock()
+            for r, y in zip(reqs, outs):
+                results[r.ticket] = y
+                self._records[r.ticket].update(t_done=now,
+                                               round=self.n_rounds)
+            self.n_rounds += 1
+            self.n_requests += len(reqs)
+        results.update(self._done)
+        self._done.clear()
+        self._note_claimed(results)
+        return results
+
+    # --------------------------------------------------------------- metrics
+    def latencies(self) -> dict[int, float]:
+        """Per-delivered-ticket submit->delivery seconds."""
+        return {t: rec["t_done"] - rec["t_submit"]
+                for t, rec in self._records.items()
+                if rec["t_done"] is not None}
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        lats = list(self.latencies().values())
+        if not lats:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def record(self, ticket: int) -> dict:
+        """Telemetry for one ticket (tenant, cost, submit/done, round)."""
+        return dict(self._records[ticket])
+
+    def reset_metrics(self) -> None:
+        """Drop delivered-ticket telemetry (e.g. after a warmup drain) so
+        percentiles reflect steady state, not executor compilation.
+
+        Records of pending tickets and of delivered-but-unclaimed results
+        (still claimable via ``result``/``flush``) are kept.
+        """
+        self._records = {t: r for t, r in self._records.items()
+                         if r["t_done"] is None or t in self._done}
+        self._claimed.clear()
 
     def stats(self) -> dict:
         s = dict(self.bank.stats())
         s.update({"rounds": self.n_rounds, "requests": self.n_requests,
-                  "pending": self.pending})
+                  "pending": self.pending, "inflight": len(self._inflight),
+                  "tenants": len(self._flows)})
         return s
 
 
 def overlay_demo(argv_ns) -> int:
-    """Mixed-kernel serving demo over the paper's Table II benchmark set."""
+    """Mixed-kernel serving demo over the paper's Table II benchmark set.
+
+    Default mode drains with the pipelined ``flush``; ``--stream`` submits
+    per-tenant and consumes ``as_completed`` to show completion-order
+    delivery plus per-tenant latency percentiles.
+    """
     from repro.core.overlay import compile_program
     from repro.core.paper_bench import BENCH_NAMES, benchmark
     from repro.core.vm import dfg_eval
@@ -122,33 +532,45 @@ def overlay_demo(argv_ns) -> int:
     names = list(BENCH_NAMES) + ["gradient"]
     kernels = {n: compile_program(benchmark(n)) for n in names}
     srv = OverlayServer(bank_capacity=argv_ns.bank, tile=argv_ns.tile,
-                        backend=argv_ns.backend)
+                        backend=argv_ns.backend,
+                        round_kernels=max(1, argv_ns.bank // 2))
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(argv_ns.requests):
         k = kernels[names[i % len(names)]]
         xs = [rng.uniform(-2, 2, (argv_ns.req_batch,)).astype(np.float32)
               for _ in k.dfg.inputs]
-        reqs.append((srv.submit(k, xs), k, xs))
+        tenant = f"tenant{i % argv_ns.tenants}"
+        reqs.append((srv.submit(k, xs, tenant=tenant), k, xs, tenant))
     srv.flush()  # warmup (compiles the executor buckets)
-    for t, k, xs in reqs:
-        srv.submit(k, xs)
+    srv.reset_metrics()
+    for _, k, xs, tenant in reqs:
+        srv.submit(k, xs, tenant=tenant)
     t0 = time.perf_counter()
-    results = srv.flush()
+    if argv_ns.stream:
+        results = {}
+        for ticket, outs in srv.as_completed():
+            results[ticket] = outs
+    else:
+        results = srv.flush()
     jax.block_until_ready(list(results.values()))
     dt = time.perf_counter() - t0
     # verify a sample against the DFG oracle
-    t, k, xs = reqs[-1]
+    _, k, xs, _ = reqs[-1]
     ref = dfg_eval(k.dfg, {n: jnp.asarray(v)
                            for n, v in zip(k.dfg.inputs, xs)})
     np.testing.assert_allclose(np.asarray(results[max(results)][0]),
                                np.asarray(ref[k.dfg.outputs[0]]),
                                rtol=1e-5, atol=1e-5)
     st = srv.stats()
+    pct = {k_: f"{v * 1e3:.2f}ms"
+           for k_, v in srv.latency_percentiles().items()}
+    mode = "as_completed stream" if argv_ns.stream else "pipelined flush"
     print(f"served {len(reqs)} mixed requests over {len(names)} kernels "
-          f"(bank={argv_ns.bank}) in {dt * 1e3:.1f} ms "
-          f"= {len(reqs) / dt:,.0f} req/s")
-    print(f"bank stats: {st}")
+          f"x {argv_ns.tenants} tenants (bank={argv_ns.bank}, {mode}) "
+          f"in {dt * 1e3:.1f} ms = {len(reqs) / dt:,.0f} req/s")
+    print(f"delivery latency percentiles: {pct}")
+    print(f"server stats: {st}")
     return 0
 
 
@@ -163,6 +585,11 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
     ap.add_argument("--requests", type=int, default=36)
     ap.add_argument("--req-batch", type=int, default=256)
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="tenant labels round-robined over --overlay-demo "
+                         "requests")
+    ap.add_argument("--stream", action="store_true",
+                    help="consume results via as_completed instead of flush")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -1,0 +1,63 @@
+"""Docs checker: validate markdown links and code references.
+
+Checks every tracked ``*.md`` file:
+
+* relative links (``[text](path)`` and ``[text](path#anchor)``) must point
+  at files that exist (http/https/mailto links are skipped);
+* backtick references to repo paths like ``src/repro/core/bank.py`` or
+  ``benchmarks/multi_tenant.py`` must exist.
+
+Run: python tools/check_docs.py   (exit code 1 on any broken reference)
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|tools)/[\w./-]+\.\w+)`")
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    in_fence = False
+    for ln, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not (md.parent / path).exists():
+                errors.append(f"{md.relative_to(ROOT)}:{ln}: "
+                              f"broken link -> {target}")
+        for ref in CODE_PATH_RE.findall(line):
+            if not (ROOT / ref).exists():
+                errors.append(f"{md.relative_to(ROOT)}:{ln}: "
+                              f"missing code path -> {ref}")
+    return errors
+
+
+def main() -> int:
+    mds = [p for p in ROOT.rglob("*.md")
+           if "__pycache__" not in p.parts and ".git" not in p.parts]
+    errors = []
+    for md in sorted(mds):
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e)
+    print(f"checked {len(mds)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken references'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
