@@ -14,11 +14,35 @@ barrier drain (``flush_sync``) — reporting wall-clock, p50/p95/p99
 delivery latency, and Jain's fairness index over per-tenant mean latency.
 The pipelined path must win on wall-clock (asserted).
 
+``--replicas R`` runs the SHARDED study instead: the same skewed
+multi-tenant zipf mix served by ``ShardedOverlayServer`` (R replicas,
+each with its own device-pinned context bank + residency routing) vs the
+single-bank ``OverlayServer`` with the SAME per-engine bank capacity.
+Sharding's aggregate residency (R x capacity) absorbs the whole working
+set while the single bank churns through evictions — the study reports
+both throughputs, the residency hit-rate after warmup, and migration /
+eviction counts, and can JSON-dump the row for the bench trajectory
+(``--json``).  Set ``JAX_DEVICES=N`` to run against N fake host devices
+(see tests/conftest.py); replicas wrap when there are fewer.
+
 Run: PYTHONPATH=src python -m benchmarks.multi_tenant [--percentiles]
+     PYTHONPATH=src python -m benchmarks.multi_tenant --replicas 4 \
+         --json artifacts/bench/sharded.json
 Reading the output: docs/SERVING.md#reading-the-benchmark.
 """
 
 import argparse
+import json
+import os
+
+# must run before jax initialises (mirrors tests/conftest.py)
+_n = os.environ.get("JAX_DEVICES", "")
+_FLAG = "--xla_force_host_platform_device_count"
+if _n.isdigit() and int(_n) > 1 and _FLAG not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}={int(_n)}".strip())
+
 import time
 
 import jax
@@ -27,7 +51,7 @@ import numpy as np
 from repro.core.overlay import (Overlay, compile_program, spatial_jit)
 from repro.core.paper_bench import BENCH_NAMES, benchmark
 from repro.core import vm as vm_mod
-from repro.launch.serve import OverlayServer
+from repro.launch.serve import OverlayServer, ShardedOverlayServer
 
 REQ_BATCH = 256
 N_REQUESTS = 36          # mixed round-robin over the 9 paper kernels
@@ -220,6 +244,124 @@ def percentiles_main(reqs_per_tenant=100, tolerance=1.0):
                                     pipe["fairness"])
 
 
+# --------------------------------------------------------- sharded study
+#: per-engine bank capacity for the sharded study: deliberately smaller
+#: than the kernel family, so the single bank pays eviction churn while
+#: R replicas' aggregate residency (R x capacity) absorbs the working set
+SHARD_BANK_CAPACITY = 4
+SHARD_TENANTS = 6
+SHARD_BATCHES = (64, 128, 256)
+
+
+def _zipf_workload(kernels, n_requests, n_tenants=SHARD_TENANTS,
+                   s=1.3, seed=0):
+    """Skewed multi-tenant mix: each tenant's kernel choice is zipf over
+    its own rotation of the family, so a few (tenant, kernel) streams
+    dominate — the traffic shape residency routing exists for."""
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    ranks = np.arange(1, len(names) + 1, dtype=np.float64)
+    p = 1.0 / ranks ** s
+    p /= p.sum()
+    work = []
+    for i in range(n_requests):
+        t = i % n_tenants
+        rot = names[t:] + names[:t]
+        k = kernels[rot[rng.choice(len(names), p=p)]]
+        b = int(SHARD_BATCHES[rng.randint(len(SHARD_BATCHES))])
+        xs = [rng.uniform(-2, 2, (b,)).astype(np.float32)
+              for _ in k.dfg.inputs]
+        work.append((f"tenant{t}", k, xs))
+    return work
+
+
+def bench_sharded(kernels, replicas, n_requests=240, backend="jnp"):
+    """Paired sharded-vs-single throughput over one skewed workload.
+
+    Both servers get identical per-engine knobs; the sharded fleet's only
+    structural edges are aggregate residency and cross-replica round
+    overlap.  Timed over ``TIMED_REPS`` reps, median wall.
+    """
+    work = _zipf_workload(kernels, n_requests)
+    srv_sh = ShardedOverlayServer(
+        n_replicas=replicas, bank_capacity=SHARD_BANK_CAPACITY,
+        round_kernels=3, max_inflight=2, backend=backend)
+    srv_1 = OverlayServer(bank_capacity=SHARD_BANK_CAPACITY,
+                          round_kernels=3, max_inflight=2, backend=backend)
+    walls = {"sharded": [], "single": []}
+    for srv, mode in ((srv_1, "single"), (srv_sh, "sharded")):
+        for tenant, k, xs in work:          # warmup: compile + residency
+            srv.submit(k, xs, tenant=tenant)
+        _block(list(srv.flush().values()))
+        srv.reset_metrics()
+        for _rep in range(TIMED_REPS):
+            # time submit + drain together: the sharded router does its
+            # residency prefetch/context loads at submit time, the single
+            # bank does the equivalent loads inside round planning — the
+            # comparison is only fair if both phases are inside the clock
+            t0 = time.perf_counter()
+            for tenant, k, xs in work:
+                srv.submit(k, xs, tenant=tenant)
+            results = srv.flush()
+            _block(list(results.values()))
+            walls[mode].append(time.perf_counter() - t0)
+    med = {m: sorted(w)[len(w) // 2] for m, w in walls.items()}
+    st = srv_sh.stats()
+    return {
+        "replicas": replicas,
+        "devices": jax.device_count(),
+        "requests_per_drain": len(work),
+        "sharded_rps": len(work) / med["sharded"],
+        "single_rps": len(work) / med["single"],
+        "speedup": med["single"] / med["sharded"],
+        "residency_hit_rate": srv_sh.residency_hit_rate,
+        "migrations": st["migrations"],
+        "sharded_evictions": st["evictions"],
+        "single_evictions": srv_1.bank.n_evictions,
+    }
+
+
+def sharded_main(replicas, n_requests=240, backend="jnp",
+                 tolerance=1.0, json_path=None):
+    """Sharded study; asserts aggregate throughput >= single-bank baseline
+    (x ``tolerance`` slack for noisy shared runners) and residency
+    hit-rate > 0.9 after warmup."""
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    row = bench_sharded(kernels, replicas, n_requests, backend)
+    print("replicas,devices,sharded_rps,single_rps,speedup,"
+          "residency_hit_rate,migrations,sharded_evictions,single_evictions")
+    print(f"{row['replicas']},{row['devices']},{row['sharded_rps']:.1f},"
+          f"{row['single_rps']:.1f},{row['speedup']:.2f},"
+          f"{row['residency_hit_rate']:.3f},{row['migrations']},"
+          f"{row['sharded_evictions']},{row['single_evictions']}")
+    print(f"# sharded ({row['replicas']} replicas on {row['devices']} "
+          f"devices) vs single bank: {row['speedup']:.2f}x; residency "
+          f"hit-rate {row['residency_hit_rate']:.1%} after warmup")
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(row, f, indent=1)
+        print(f"# wrote {json_path}")
+    assert row["sharded_rps"] >= row["single_rps"] * tolerance, (
+        "sharded fleet did not beat the single-bank baseline",
+        row["sharded_rps"], row["single_rps"], tolerance)
+    if replicas * SHARD_BANK_CAPACITY >= len(kernels):
+        # aggregate residency covers the family: after warmup virtually
+        # every request must route to a resident replica
+        assert row["residency_hit_rate"] > 0.9, (
+            "residency routing missed too often after warmup",
+            row["residency_hit_rate"])
+    else:
+        # structurally capacity-starved (e.g. --replicas 2 x bank 4 < 9
+        # kernels): some misses are unavoidable, only sanity-check
+        print(f"# aggregate residency {replicas * SHARD_BANK_CAPACITY} < "
+              f"{len(kernels)} kernels; 0.9 hit-rate bar not applicable")
+        assert row["residency_hit_rate"] > 0.5, (
+            "residency routing defeated even its capacity floor",
+            row["residency_hit_rate"])
+
+
 def run():
     kernels = {n: compile_program(benchmark(n))
                for n in BENCH_NAMES + ("gradient",)}
@@ -242,9 +384,22 @@ def main(argv=None):
     ap.add_argument("--requests-per-tenant", type=int, default=100,
                     help="per-tenant request count for --percentiles")
     ap.add_argument("--tolerance", type=float, default=1.0,
-                    help="win-assertion slack for --percentiles on noisy "
-                         "shared runners (pipe < sync * tolerance)")
+                    help="win-assertion slack on noisy shared runners "
+                         "(applies to --percentiles and --replicas)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run the sharded study with this many replicas "
+                         "(0 = off); set JAX_DEVICES=N for N fake devices")
+    ap.add_argument("--requests", type=int, default=240,
+                    help="requests per drain for --replicas")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="executor backend for --replicas (pallas runs in "
+                         "interpret mode off-TPU)")
+    ap.add_argument("--json", default=None,
+                    help="dump the --replicas study row to this JSON path")
     args = ap.parse_args(argv)
+    if args.replicas:
+        return sharded_main(args.replicas, args.requests, args.backend,
+                            args.tolerance, args.json)
     if args.percentiles:
         return percentiles_main(args.requests_per_tenant, args.tolerance)
     header, rows, rps_bank, rps_load, rps_jit, retraces = run()

@@ -33,13 +33,31 @@ Pipeline-safety hooks for the async serving engine
   resident-but-unpinned, optionally excluding keys the caller will pin);
   the engine retires in-flight rounds until the next round's new contexts
   fit.
+
+Multi-device serving (``launch.serve.ShardedOverlayServer``) adds two
+pieces at this layer:
+
+* a ``device`` pin — a bank constructed with ``device=`` keeps its stacked
+  instruction arrays committed to that device (every ``.at[slot].set``
+  context write stays there), so each serving replica's working set is
+  genuinely resident on its own device instead of silently living on the
+  JAX default device;
+* residency GENERATIONS — ``generation`` bumps on every slot-content
+  change (load or eviction) and each resident key remembers the generation
+  at which it landed.  A :class:`BankDirectory` snapshot of (replica,
+  slot, generation) can therefore be validated later with ``peek``: a
+  mismatched generation means the directory entry is stale (the context
+  was evicted, possibly reloaded) and the router must fall back instead of
+  trusting the cached slot.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 from collections import OrderedDict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -92,23 +110,30 @@ class ContextBank:
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY,
                  s_max: int = S_MAX, dtype=jnp.float32,
-                 max_outputs: int = DEFAULT_MAX_OUTPUTS):
+                 max_outputs: int = DEFAULT_MAX_OUTPUTS,
+                 device=None):
         if capacity < 1:
             raise BankError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.s_max = s_max
         self.dtype = dtype
         self.max_outputs = max_outputs
+        #: device the stacked arrays are committed to; None = JAX default
+        #: (uncommitted).  Serving replicas pin their bank so the working
+        #: set is resident where the replica's rounds execute.
+        self.device = device
         # identity padding for empty slots: BYP slot i <- rf[i], like
         # make_context's padding, so an unloaded slot is a pure pass-through
         ident = np.tile(np.arange(IM_DEPTH, dtype=np.int32),
                         (capacity, s_max, 1))
-        self.op = jnp.full((capacity, s_max, IM_DEPTH), int(Op.BYP),
-                           jnp.int32)
-        self.src_a = jnp.asarray(ident)
-        self.src_b = jnp.asarray(ident)
-        self.imm = jnp.zeros((capacity, s_max, IM_DEPTH), dtype)
-        self.out_idx = jnp.zeros((capacity, max_outputs), jnp.int32)
+        self.op = self._place(np.full((capacity, s_max, IM_DEPTH),
+                                      int(Op.BYP), np.int32))
+        self.src_a = self._place(ident)
+        self.src_b = self._place(ident.copy())
+        self.imm = self._place(np.zeros((capacity, s_max, IM_DEPTH),
+                                        np.dtype(dtype)))
+        self.out_idx = self._place(np.zeros((capacity, max_outputs),
+                                            np.int32))
         #: residency map: context_key -> slot, MRU last
         self._lru: OrderedDict[tuple[str, str], int] = OrderedDict()
         self._free = list(range(capacity))
@@ -121,9 +146,22 @@ class ContextBank:
         self._ctx_cache_cap = 4 * capacity
         #: eviction guards: context_key -> pin refcount (see ``pin``)
         self._pins: dict[tuple[str, str], int] = {}
+        #: residency generation: bumped on every slot-content change (load
+        #: into a slot or eviction), so external residency caches
+        #: (BankDirectory) can detect staleness without subscribing to
+        #: eviction events
+        self.generation = 0
+        #: context_key -> generation at which that key became resident
+        self._key_gen: dict[tuple[str, str], int] = {}
         self.n_loads = 0
         self.n_evictions = 0
         self.n_hits = 0
+
+    def _place(self, x):
+        """Commit an array to this bank's device (default device if None)."""
+        if self.device is None:
+            return jnp.asarray(x)
+        return jax.device_put(jnp.asarray(x), self.device)
 
     # ------------------------------------------------------------- residency
     def __len__(self) -> int:
@@ -151,6 +189,20 @@ class ContextBank:
 
     def meta(self, slot: int) -> dict:
         return self._meta[slot]
+
+    def peek(self, kernel) -> tuple[int, int] | None:
+        """Residency probe WITHOUT an LRU touch: ``(slot, generation)``.
+
+        Returns None when the kernel is not resident.  Routers use this to
+        validate a :class:`BankDirectory` entry — a probe is not a *use*,
+        so it must not refresh the key's LRU position (the eventual
+        ``load`` at plan time is the use).
+        """
+        key = context_key(getattr(kernel, "program", kernel))
+        slot = self._lru.get(key)
+        if slot is None:
+            return None
+        return slot, self._key_gen[key]
 
     # -------------------------------------------------------------- pinning
     def pin(self, kernel) -> int:
@@ -258,6 +310,7 @@ class ContextBank:
                     f"before loading new tenants")
             slot = self._lru.pop(victim)
             del self._meta[slot]
+            del self._key_gen[victim]
             self.n_evictions += 1
         self.op = self.op.at[slot].set(ctx.op)
         self.src_a = self.src_a.at[slot].set(ctx.src_a)
@@ -270,6 +323,11 @@ class ContextBank:
                             "n_outputs": ctx.n_outputs,
                             "context_bytes": ctx.context_bytes}
         self._lru[key] = slot
+        # one bump covers the slot's content change (and the eviction that
+        # freed it, if any): every stale BankDirectory entry — the victim's
+        # and any older snapshot of this key — now fails its generation check
+        self.generation += 1
+        self._key_gen[key] = self.generation
         self.n_loads += 1
         return slot
 
@@ -281,4 +339,89 @@ class ContextBank:
     def stats(self) -> dict:
         return {"capacity": self.capacity, "resident": len(self),
                 "loads": self.n_loads, "evictions": self.n_evictions,
-                "hits": self.n_hits, "pinned": self.n_pinned}
+                "hits": self.n_hits, "pinned": self.n_pinned,
+                "generation": self.generation}
+
+
+# ================================================================ directory
+@dataclasses.dataclass
+class DirectoryEntry:
+    """One published residency: kernel key -> (replica, slot, generation)."""
+
+    replica: int
+    slot: int
+    generation: int
+
+
+class BankDirectory:
+    """Residency cache for a fleet of per-replica ContextBanks.
+
+    The sharded serving router keys every request by context content
+    (``context_key``) and asks the directory which replica already hosts
+    that context.  The directory is a CACHE, not the source of truth — the
+    banks are.  Every ``locate`` validates its entry against the owning
+    bank with ``ContextBank.peek``: the entry is fresh only when the key
+    is still resident there at the SAME generation it was published at.
+    An eviction (or evict-and-reload) on the replica bumps the bank's
+    generation, so the stale entry fails validation, is dropped, and the
+    router takes the miss/fallback path instead of dispatching against a
+    slot that now holds another tenant's context.
+
+    ``publish`` after a load/prefetch records the fresh residency;
+    ``drop`` forgets a key (e.g. when a migration retires the old owner).
+    """
+
+    def __init__(self):
+        self._map: dict[tuple[str, str], DirectoryEntry] = {}
+        self.n_fresh = 0
+        self.n_stale = 0
+        self.n_unknown = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def publish(self, kernel, replica: int, slot: int,
+                generation: int) -> None:
+        key = context_key(getattr(kernel, "program", kernel))
+        self._map[key] = DirectoryEntry(replica=replica, slot=slot,
+                                        generation=generation)
+
+    def publish_current(self, kernel, replica: int, bank: ContextBank) -> None:
+        """Publish the key's CURRENT residency in ``bank`` (must be
+        resident — call right after a ``load``/``prefetch``)."""
+        res = bank.peek(kernel)
+        if res is None:
+            raise BankError("publish_current: kernel is not resident")
+        self.publish(kernel, replica, res[0], res[1])
+
+    def drop(self, kernel) -> None:
+        self._map.pop(context_key(getattr(kernel, "program", kernel)), None)
+
+    def locate(self, kernel, banks) -> int | None:
+        """Validated lookup: the owning replica id, or None on miss/stale.
+
+        ``banks`` maps replica id -> ContextBank (list or dict).  A stale
+        entry (generation mismatch, evicted key, or out-of-range replica)
+        is dropped and counted; the caller must treat None as a residency
+        miss and fall back to its placement policy.
+        """
+        key = context_key(getattr(kernel, "program", kernel))
+        ent = self._map.get(key)
+        if ent is None:
+            self.n_unknown += 1
+            return None
+        try:
+            bank = banks[ent.replica]
+        except (IndexError, KeyError):
+            bank = None
+        res = bank.peek(kernel) if bank is not None else None
+        if res is None or res != (ent.slot, ent.generation):
+            del self._map[key]
+            self.n_stale += 1
+            return None
+        self.n_fresh += 1
+        return ent.replica
+
+    def stats(self) -> dict:
+        return {"entries": len(self._map), "fresh": self.n_fresh,
+                "stale": self.n_stale, "unknown": self.n_unknown}

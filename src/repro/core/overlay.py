@@ -119,24 +119,38 @@ class Overlay:
     """A fixed executor for a family of kernels (<= s_max stages)."""
 
     def __init__(self, s_max: int = vm.S_MAX, dtype=jnp.float32,
-                 backend: str = "jnp"):
+                 backend: str = "jnp", device=None):
         if backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.s_max = s_max
         self.dtype = dtype
         self.backend = backend
+        #: device this overlay's contexts and launches are pinned to;
+        #: None = JAX default.  A sharded serving replica pins its overlay
+        #: (and its ContextBank) so rounds execute where the working set
+        #: is resident, never via implicit default-device placement.
+        self.device = device
 
     # --------------------------------------------------------------- context
     def load(self, kernel: CompiledKernel) -> Context:
-        """Context switch: build + device_put the instruction image."""
+        """Context switch: build + device_put the instruction image.
+
+        The arrays are placed field by field: ``Context`` is a plain
+        dataclass, not a registered pytree, so a ``jax.tree.map`` over it
+        would treat the whole context as one leaf and silently skip the
+        transfer — the image would stay on the default device no matter
+        what this overlay is pinned to (regression-tested in
+        tests/test_sharded_serving.py).
+        """
         ctx = make_context(kernel.program, self.s_max, self.dtype)
-        return jax.tree.map(
-            lambda x: jax.device_put(x) if isinstance(x, jax.Array) else x,
-            ctx, is_leaf=lambda x: isinstance(x, jax.Array))
+        return dataclasses.replace(
+            ctx, **{f: jax.device_put(getattr(ctx, f), self.device)
+                    for f in ("op", "src_a", "src_b", "imm", "out_idx")})
 
     # --------------------------------------------------------------- execute
     def __call__(self, ctx: Context, xs: list[jax.Array]) -> list[jax.Array]:
-        x = pad_inputs([jnp.asarray(v, self.dtype) for v in xs])
+        x = pad_inputs([jnp.asarray(v, self.dtype) for v in xs],
+                       device=self.device)
         if self.backend == "pallas":
             from repro.kernels.tmfu import ops as tmfu_ops
             ys = tmfu_ops.tmfu_pipeline(ctx, x)
@@ -155,7 +169,8 @@ class Overlay:
         """
         ks = list(kernels)
         bank = ContextBank(capacity or max(len(ks), 1), s_max=self.s_max,
-                           dtype=self.dtype, max_outputs=max_outputs)
+                           dtype=self.dtype, max_outputs=max_outputs,
+                           device=self.device)
         for k in ks:
             bank.load(k)
         return bank
@@ -263,6 +278,13 @@ class Overlay:
         if batch is None:
             return None
         id_arr, x_stack = batch
+        # co-locate the round with the bank: a device-pinned bank (sharded
+        # replica) must execute where its contexts are resident — mixing a
+        # committed bank with default-device inputs is an XLA placement
+        # error, not a transfer
+        device = getattr(bank, "device", None) or self.device
+        if device is not None:
+            id_arr, x_stack = jax.device_put((id_arr, x_stack), device)
         if self.backend == "pallas":
             from repro.kernels.tmfu import ops as tmfu_ops
             return tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack)

@@ -187,12 +187,21 @@ def vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x,
     return jax.vmap(one)(ctx_ids, x)
 
 
-def pad_inputs(xs: list[jax.Array], rf_depth: int = RF_DEPTH) -> jax.Array:
-    """Stack primary inputs into the [rf_depth, batch] RF image."""
+def pad_inputs(xs: list[jax.Array], rf_depth: int = RF_DEPTH,
+               device=None) -> jax.Array:
+    """Stack primary inputs into the [rf_depth, batch] RF image.
+
+    ``device`` commits the image (and thus the execution that consumes it)
+    to a specific device — required when the context it will run against
+    is pinned to a non-default device (sharded serving replicas), where
+    implicit default-device placement would be a cross-device error.
+    """
     batch = xs[0].shape
     x = jnp.zeros((rf_depth, *batch), dtype=xs[0].dtype)
     for i, v in enumerate(xs):
         x = x.at[i].set(v)
+    if device is not None:
+        x = jax.device_put(x, device)
     return x
 
 

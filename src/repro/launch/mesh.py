@@ -17,6 +17,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(n_replicas: int | None = None, devices=None):
+    """One device per overlay-serving replica (the sharded context banks).
+
+    Unlike the SPMD training meshes above, serving replicas are
+    INDEPENDENT single-device workers — each hosts its own ContextBank
+    working set and executes its own rounds — so the 'mesh' is just a
+    placement list.  When ``n_replicas`` exceeds the live device count the
+    assignment wraps (several replicas share a device): correctness is
+    unchanged — residency routing and the directory work per replica, not
+    per device — which is exactly what lets the differential tests run
+    2/4/8 replicas on single-device CI (or on fake devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``, see
+    tests/conftest.py).
+    """
+    if devices is None:
+        devices = jax.devices()
+    if n_replicas is None:
+        n_replicas = len(devices)
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    return [devices[i % len(devices)] for i in range(n_replicas)]
+
+
 def make_mesh_from_devices(devices, model_parallel: int = 16):
     """Elastic re-mesh: build the largest (data, model) mesh from a live
     device list (used by distributed.elastic on simulated failures)."""

@@ -29,6 +29,15 @@ pipeline (``Overlay.plan/assemble/execute/collect``, see core/overlay.py):
 * In-flight rounds pin their contexts in the ``ContextBank`` so LRU
   eviction can never reassign a slot under a launched round.
 
+``ShardedOverlayServer`` scales the engine across devices: N replicas
+(each an ``OverlayServer`` pinned to one device of
+``launch.mesh.make_serving_mesh`` with its own bank) behind a
+residency-aware router — a shared ``core.bank.BankDirectory`` routes each
+request to the replica already holding its context (entries validated by
+residency generation), falls back least-loaded on miss/stale, migrates
+hot contexts, and applies admission globally.  Results stay bit-for-bit
+identical to the single-bank engine (tests/test_sharded_serving.py).
+
 See docs/SERVING.md for the full guide.
 """
 
@@ -106,6 +115,55 @@ class TokenBucket:
         return max(0.0, (cost - self.tokens) / self.rate)
 
 
+class AdmissionControl:
+    """Per-tenant token-bucket admission for one serving front-end.
+
+    ``admission`` maps tenant -> TokenBucket (or a ``(rate, burst)`` spec);
+    ``default_admission`` is applied lazily to tenants without an explicit
+    bucket.  Shared by ``OverlayServer`` (single bank) and
+    ``ShardedOverlayServer`` (where admission must span all replicas — a
+    tenant cannot dodge its rate by having its kernels land on different
+    replicas, so the buckets live in the router, not per replica).
+    """
+
+    #: bucket-count high-water mark before lazily-created default buckets
+    #: are pruned — an unbounded tenant-label space must not leak buckets
+    MAX_BUCKETS = 4096
+
+    def __init__(self, admission: dict | None = None,
+                 default_admission: tuple | None = None,
+                 clock=time.monotonic):
+        self.clock = clock
+        self._buckets: dict[str, TokenBucket] = {}
+        for tenant, spec in (admission or {}).items():
+            self._buckets[tenant] = (spec if isinstance(spec, TokenBucket)
+                                     else TokenBucket(*spec, clock=clock))
+        self.default_admission = default_admission
+        self._default_buckets: set[str] = set()
+
+    def admit(self, tenant: str, cost: float) -> None:
+        """Spend ``cost`` tokens from the tenant's bucket or raise
+        :class:`AdmissionError`; tenants with no bucket (and no default
+        policy) are always admitted."""
+        bucket = self._buckets.get(tenant)
+        if bucket is None and self.default_admission is not None:
+            bucket = TokenBucket(*self.default_admission, clock=self.clock)
+            self._buckets[tenant] = bucket
+            self._default_buckets.add(tenant)
+            if len(self._buckets) > self.MAX_BUCKETS:
+                # a refilled-to-burst default bucket carries no state
+                for t in list(self._default_buckets):
+                    b = self._buckets[t]
+                    b._refill()
+                    if t != tenant and b.tokens >= b.burst:
+                        del self._buckets[t]
+                        self._default_buckets.discard(t)
+        if bucket is not None and not bucket.try_acquire(cost):
+            retry = (math.inf if cost > bucket.burst
+                     else bucket.retry_after(cost))
+            raise AdmissionError(tenant, retry)
+
+
 # ===================================================== overlay request engine
 @dataclasses.dataclass
 class OverlayRequest:
@@ -178,12 +236,17 @@ class OverlayServer:
                  quantum_tiles: float | None = None,
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
-                 clock=time.monotonic, metrics_window: int = 65536):
+                 clock=time.monotonic, metrics_window: int = 65536,
+                 device=None):
         from repro.core.bank import ContextBank
         from repro.core.overlay import Overlay
-        self.overlay = Overlay(s_max=s_max, dtype=dtype, backend=backend)
+        #: device this server's bank + rounds are pinned to (None = default
+        #: placement); set by ShardedOverlayServer, one device per replica
+        self.device = device
+        self.overlay = Overlay(s_max=s_max, dtype=dtype, backend=backend,
+                               device=device)
         self.bank = ContextBank(bank_capacity, s_max=s_max, dtype=dtype,
-                                max_outputs=max_outputs)
+                                max_outputs=max_outputs, device=device)
         self.tile = tile
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
@@ -204,11 +267,8 @@ class OverlayServer:
                 f"a request's tile cost")
         self.quantum_tiles = quantum_tiles
         self.clock = clock
-        self._buckets: dict[str, TokenBucket] = {}
-        for tenant, spec in (admission or {}).items():
-            self._buckets[tenant] = (spec if isinstance(spec, TokenBucket)
-                                     else TokenBucket(*spec, clock=clock))
-        self.default_admission = default_admission
+        self.admission = AdmissionControl(admission, default_admission,
+                                          clock=clock)
         self._flows: dict[str, _Flow] = {}
         self._rr: deque[str] = deque()      # tenant round-robin order
         self._inflight: deque[_Inflight] = deque()
@@ -219,8 +279,8 @@ class OverlayServer:
         #: grow per-request state forever
         self.metrics_window = metrics_window
         self._claimed: deque[int] = deque()
-        self._default_buckets: set[str] = set()
         self._next_ticket = 0
+        self._pending_tiles = 0
         self.n_rounds = 0
         self.n_requests = 0
 
@@ -234,24 +294,7 @@ class OverlayServer:
         from repro.core.bank import context_key
         xs = list(xs)
         cost = -(-int(np.shape(xs[0])[0]) // self.tile)
-        bucket = self._buckets.get(tenant)
-        if bucket is None and self.default_admission is not None:
-            bucket = TokenBucket(*self.default_admission, clock=self.clock)
-            self._buckets[tenant] = bucket
-            self._default_buckets.add(tenant)
-            if len(self._buckets) > 4096:
-                # an unbounded tenant-label space must not leak buckets:
-                # a refilled-to-burst default bucket carries no state
-                for t in list(self._default_buckets):
-                    b = self._buckets[t]
-                    b._refill()
-                    if t != tenant and b.tokens >= b.burst:
-                        del self._buckets[t]
-                        self._default_buckets.discard(t)
-        if bucket is not None and not bucket.try_acquire(max(1, cost)):
-            retry = (math.inf if max(1, cost) > bucket.burst
-                     else bucket.retry_after(max(1, cost)))
-            raise AdmissionError(tenant, retry)
+        self.admission.admit(tenant, max(1, cost))
         t = self._next_ticket
         self._next_ticket += 1
         req = OverlayRequest(ticket=t, kernel=kernel, xs=xs, tenant=tenant,
@@ -262,6 +305,7 @@ class OverlayServer:
             flow = self._flows[tenant] = _Flow(queue=deque())
             self._rr.append(tenant)
         flow.queue.append(req)
+        self._pending_tiles += req.cost
         self._records[t] = {"tenant": tenant, "t_submit": req.t_submit,
                             "cost": cost, "t_done": None, "round": None}
         return t
@@ -271,6 +315,15 @@ class OverlayServer:
         """Requests submitted but not yet delivered (queued + in flight)."""
         queued = sum(len(f.queue) for f in self._flows.values())
         return queued + sum(len(i.reqs) for i in self._inflight)
+
+    @property
+    def pending_tiles(self) -> int:
+        """Undelivered work in dispatch tiles — the sharded router's load
+        signal for least-loaded fallback and migration decisions.  A
+        running counter (submit adds, delivery subtracts): the router
+        reads this for every replica on every submit, so it must not
+        scan the queues."""
+        return self._pending_tiles
 
     # ------------------------------------------------------- round formation
     def _take_from_flow(self, flow: _Flow, keys: set, cap: int) -> list:
@@ -378,6 +431,7 @@ class OverlayServer:
             rec["round"] = inf.round_no
             tickets.append(r.ticket)
         inf.plan.release(self.bank)
+        self._pending_tiles -= sum(r.cost for r in inf.reqs)
         self.n_requests += len(inf.reqs)
         return tickets
 
@@ -476,6 +530,7 @@ class OverlayServer:
                 self._records[r.ticket].update(t_done=now,
                                                round=self.n_rounds)
             self.n_rounds += 1
+            self._pending_tiles -= sum(r.cost for r in reqs)
             self.n_requests += len(reqs)
         results.update(self._done)
         self._done.clear()
@@ -516,6 +571,299 @@ class OverlayServer:
                   "pending": self.pending, "inflight": len(self._inflight),
                   "tenants": len(self._flows)})
         return s
+
+
+# ==================================================== sharded serving layer
+class ShardedOverlayServer:
+    """Residency-routed serving over N per-replica context banks.
+
+    The paper keeps ONE time-multiplexed FU pipeline hot by making a
+    kernel switch an index; the single-bank ``OverlayServer`` scales that
+    to one device.  This layer scales it ACROSS devices the way many-core
+    overlays replicate the overlay fabric — except replicas are not
+    mirrors: each hosts its own ``ContextBank`` working set (affinity, not
+    replication), so aggregate residency grows with the fleet while each
+    replica's instruction store stays small.
+
+    * ROUTING — every request is keyed by context content and looked up in
+      a shared :class:`~repro.core.bank.BankDirectory`.  A fresh entry
+      (validated against the owning bank's residency generation) routes
+      the request to the replica already holding its context — a residency
+      HIT.  A miss (or a stale entry — the context was evicted since it
+      was published) falls back to the least-loaded replica (by pending
+      tiles), prefetches the context there, and publishes the new
+      residency.
+    * MIGRATION — when the owning replica is hot (its pending tiles exceed
+      ``migrate_factor`` x the coolest replica's, by at least
+      ``migrate_min_tiles``), the context is re-homed: prefetched on the
+      cool replica, republished, and new traffic follows it.  The old copy
+      ages out of the hot bank via LRU; in-flight rounds there are
+      untouched (pins).  A per-key cooldown (``migrate_cooldown`` submits)
+      stops a single globally-hot key from thrashing between replicas.
+    * ADMISSION — token buckets live HERE, spanning replicas, so a
+      tenant's rate cannot be dodged by its kernels landing on different
+      replicas.  Per-replica DRR fairness is unchanged underneath.
+    * DELIVERY — tickets are global; ``flush``/``as_completed``/``result``
+      merge the per-replica pipelines.  The drain interleaves round
+      launches across replicas before blocking on any of them, so
+      per-device rounds execute concurrently (JAX async dispatch).
+      ``flush_sync`` drains replica-by-replica with the barrier loop — the
+      oracle path.
+
+    Every replica is a full ``OverlayServer`` pinned to one device of
+    ``launch.mesh.make_serving_mesh`` (devices wrap when the fleet is
+    larger than the machine — correctness never depends on real device
+    count, which is how the differential tests run 2/4/8 replicas in CI).
+    """
+
+    def __init__(self, n_replicas: int = 2, bank_capacity: int = 8,
+                 tile: int = 128, backend: str = "jnp", s_max: int = 16,
+                 dtype=jnp.float32, max_outputs: int = 8,
+                 max_inflight: int = 2, round_kernels: int | None = None,
+                 quantum_tiles: float | None = None,
+                 admission: dict | None = None,
+                 default_admission: tuple | None = None,
+                 clock=time.monotonic, metrics_window: int = 65536,
+                 devices=None, migrate_factor: float = 4.0,
+                 migrate_min_tiles: int = 16, migrate_cooldown: int = 32):
+        from repro.core.bank import BankDirectory
+        from repro.launch.mesh import make_serving_mesh
+        self.devices = make_serving_mesh(n_replicas, devices)
+        self.n_replicas = len(self.devices)
+        self.tile = tile
+        # replicas do NOT get admission policies: admission is global
+        self.replicas = [
+            OverlayServer(bank_capacity=bank_capacity, tile=tile,
+                          backend=backend, s_max=s_max, dtype=dtype,
+                          max_outputs=max_outputs, max_inflight=max_inflight,
+                          round_kernels=round_kernels,
+                          quantum_tiles=quantum_tiles, clock=clock,
+                          metrics_window=metrics_window, device=d)
+            for d in self.devices]
+        self.directory = BankDirectory()
+        self.admission = AdmissionControl(admission, default_admission,
+                                          clock=clock)
+        self.clock = clock
+        if migrate_factor < 1:
+            raise ValueError(
+                f"migrate_factor must be >= 1, got {migrate_factor}")
+        self.migrate_factor = migrate_factor
+        self.migrate_min_tiles = migrate_min_tiles
+        self.migrate_cooldown = migrate_cooldown
+        self.metrics_window = metrics_window
+        self._owner: dict[int, tuple[int, int]] = {}   # global -> (rep, loc)
+        self._global: list[dict[int, int]] = [
+            {} for _ in range(self.n_replicas)]        # rep: loc -> global
+        self._claimed: deque[int] = deque()
+        self._migrated_at: dict[tuple, int] = {}
+        self._next_ticket = 0
+        self._rr = 0                                   # retire fan-in ptr
+        self.n_submits = 0
+        self.n_route_hits = 0
+        self.n_route_misses = 0
+        self.n_migrations = 0
+
+    @property
+    def banks(self):
+        """Per-replica ContextBanks, replica order."""
+        return [rep.bank for rep in self.replicas]
+
+    # ----------------------------------------------------------------- route
+    def _route(self, kernel) -> int:
+        """Pick the serving replica for one request (see class docstring)."""
+        from repro.core.bank import BankError, context_key
+        loads = [rep.pending_tiles for rep in self.replicas]
+        coolest = min(range(self.n_replicas), key=loads.__getitem__)
+        owner = self.directory.locate(kernel, self.banks)
+        if owner is not None:
+            hot = (owner != coolest
+                   and loads[owner] - loads[coolest] >= self.migrate_min_tiles
+                   and loads[owner] >= self.migrate_factor
+                   * max(loads[coolest], 1))
+            key = context_key(kernel.program)
+            last = self._migrated_at.get(key)
+            cooled = (last is None
+                      or self.n_submits - last >= self.migrate_cooldown)
+            if not (hot and cooled):
+                self.n_route_hits += 1
+                return owner
+            target = coolest
+            self._migrated_at[key] = self.n_submits
+            self.n_migrations += 1
+        else:
+            self.n_route_misses += 1
+            target = coolest
+        # warm the context on its new home and publish the residency; a
+        # momentarily all-pinned bank defers the load to the replica's own
+        # round plan (which retires rounds until it fits)
+        try:
+            self.replicas[target].bank.prefetch([kernel])
+            self.directory.publish_current(kernel, target,
+                                           self.replicas[target].bank)
+        except BankError:
+            self.directory.drop(kernel)
+        return target
+
+    # ----------------------------------------------------------------- queue
+    def submit(self, kernel, xs, tenant: str = DEFAULT_TENANT) -> int:
+        """Admit globally, route by residency, enqueue on one replica;
+        returns a global ticket."""
+        xs = list(xs)
+        cost = max(1, -(-int(np.shape(xs[0])[0]) // self.tile))
+        self.admission.admit(tenant, cost)
+        rep = self._route(kernel)
+        loc = self.replicas[rep].submit(kernel, xs, tenant=tenant)
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._owner[t] = (rep, loc)
+        self._global[rep][loc] = t
+        self.n_submits += 1
+        return t
+
+    @property
+    def pending(self) -> int:
+        return sum(rep.pending for rep in self.replicas)
+
+    @property
+    def residency_hit_rate(self) -> float:
+        """Routed-to-resident-replica fraction (stale hits count as
+        misses); NaN before any routing decision."""
+        n = self.n_route_hits + self.n_route_misses
+        return self.n_route_hits / n if n else float("nan")
+
+    # -------------------------------------------------------------- retrieve
+    def _to_global(self, rep: int, local_results: dict) -> dict:
+        return {self._global[rep][loc]: ys
+                for loc, ys in local_results.items()}
+
+    def _note_claimed(self, tickets) -> None:
+        self._claimed.extend(tickets)
+        while len(self._claimed) > self.metrics_window:
+            t = self._claimed.popleft()
+            rep_loc = self._owner.pop(t, None)
+            if rep_loc is not None:
+                self._global[rep_loc[0]].pop(rep_loc[1], None)
+
+    def result(self, ticket: int):
+        """Block until the ticket's outputs are ready (drives only the
+        owning replica's pipeline); one claim per ticket."""
+        if ticket not in self._owner:
+            raise KeyError(f"unknown ticket {ticket}")
+        rep, loc = self._owner[ticket]
+        out = self.replicas[rep].result(loc)
+        self._note_claimed([ticket])
+        return out
+
+    def as_completed(self):
+        """Yield ``(ticket, outputs)`` in completion order across ALL
+        replicas; keeps every replica's pipeline full while iterating and
+        retires rounds fan-in round-robin so no replica's results are
+        held back behind another's backlog."""
+        while True:
+            yielded = False
+            for rep_id, rep in enumerate(self.replicas):
+                while rep._done:
+                    loc, outs = rep._done.popitem(last=False)
+                    rep._note_claimed([loc])
+                    t = self._global[rep_id][loc]
+                    self._note_claimed([t])
+                    yielded = True
+                    yield t, outs
+            if yielded:
+                continue
+            for rep in self.replicas:
+                rep._fill_pipeline()
+            live = [rep for rep in self.replicas if rep._inflight]
+            if not live:
+                return
+            live[self._rr % len(live)]._retire_oldest()
+            self._rr += 1
+
+    def flush(self) -> dict[int, list]:
+        """Serve everything queued on every replica; {ticket: outputs}.
+
+        Launches rounds on ALL replicas before blocking on any one of
+        them, so the per-device rounds execute concurrently; within each
+        replica the usual round pipelining applies.
+        """
+        while True:
+            for rep in self.replicas:
+                rep._fill_pipeline()
+            live = [rep for rep in self.replicas if rep._inflight]
+            if not live:
+                break
+            for rep in live:
+                rep._retire_oldest()
+        results: dict[int, list] = {}
+        for rep_id, rep in enumerate(self.replicas):
+            results.update(self._to_global(rep_id, rep.flush()))
+        self._note_claimed(results)
+        return results
+
+    def flush_sync(self) -> dict[int, list]:
+        """Barrier drain, replica by replica — the sharded oracle path
+        (no cross-replica overlap, no intra-replica pipelining)."""
+        results: dict[int, list] = {}
+        for rep_id, rep in enumerate(self.replicas):
+            results.update(self._to_global(rep_id, rep.flush_sync()))
+        self._note_claimed(results)
+        return results
+
+    # --------------------------------------------------------------- metrics
+    def record(self, ticket: int) -> dict:
+        """Telemetry for one global ticket (adds the serving replica)."""
+        rep, loc = self._owner[ticket]
+        rec = self.replicas[rep].record(loc)
+        rec["replica"] = rep
+        return rec
+
+    def latencies(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        for rep_id, rep in enumerate(self.replicas):
+            for loc, lat in rep.latencies().items():
+                t = self._global[rep_id].get(loc)
+                if t is not None:
+                    out[t] = lat
+        return out
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        lats = list(self.latencies().values())
+        if not lats:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def reset_metrics(self) -> None:
+        """Drop delivered-ticket telemetry AND routing counters (e.g.
+        after a warmup drain) so hit rates reflect steady state."""
+        for rep in self.replicas:
+            rep.reset_metrics()
+        # release the claimed tickets' routing maps too — the replicas
+        # just dropped those tickets' records, and leaving entries in
+        # _owner/_global would leak them for the server's lifetime
+        # (delivered-but-unclaimed tickets are not in _claimed and keep
+        # their routing)
+        while self._claimed:
+            t = self._claimed.popleft()
+            rep_loc = self._owner.pop(t, None)
+            if rep_loc is not None:
+                self._global[rep_loc[0]].pop(rep_loc[1], None)
+        self.n_route_hits = self.n_route_misses = self.n_migrations = 0
+        d = self.directory
+        d.n_fresh = d.n_stale = d.n_unknown = 0
+
+    def stats(self) -> dict:
+        per = [rep.stats() for rep in self.replicas]
+        return {"replicas": self.n_replicas,
+                "pending": self.pending,
+                "route_hits": self.n_route_hits,
+                "route_misses": self.n_route_misses,
+                "residency_hit_rate": self.residency_hit_rate,
+                "migrations": self.n_migrations,
+                "directory": self.directory.stats(),
+                "per_replica": per,
+                "rounds": sum(p["rounds"] for p in per),
+                "requests": sum(p["requests"] for p in per),
+                "evictions": sum(p["evictions"] for p in per)}
 
 
 def overlay_demo(argv_ns) -> int:

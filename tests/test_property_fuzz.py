@@ -8,6 +8,14 @@ the Pallas TMFU kernel (interpret mode), and the multi-context bank path.
 
 Runs with or without hypothesis installed (repro.testing falls back to a
 seeded-random strategy shim).
+
+The sharded-serving fuzz (bottom of this file) drives random
+interleavings of ``submit`` / ``flush`` / ``flush_sync`` /
+``as_completed`` / ``result`` / direct ``bank.load`` churn across a
+random replica fleet and holds every delivered ticket to the per-request
+single-bank oracle — including the router's stale-directory fallback,
+which each example provokes deliberately (direct loads bump the banks'
+residency generations behind the directory's back).
 """
 
 import jax.numpy as jnp
@@ -142,3 +150,101 @@ def test_fuzz_multi_context_dispatch_bitexact(seed):
     [ys] = ov.dispatch(bank, [(k, xs)])
     for j, y in enumerate(ys):
         np.testing.assert_array_equal(np.asarray(y), np.asarray(solo[j]))
+
+
+# ------------------------------------------------------- sharded interleaving
+def _random_kernel_pool(rng, n=4):
+    kernels = []
+    i = 0
+    while len(kernels) < n:
+        dfg = random_dfg(int(rng.randint(2 ** 31)), max_stmts=10,
+                         name=f"shfz_{rng.randint(1 << 30)}_{i}")
+        i += 1
+        k = _compile_or_none(dfg)
+        if k is not None and dfg.depth <= 16:
+            kernels.append(k)
+    return kernels
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_fuzz_sharded_interleaving_bitexact(seed):
+    """Random submit/flush/load/result interleavings across a random
+    replica fleet == the single-bank oracle, ticket by ticket."""
+    from repro.launch.serve import ShardedOverlayServer
+
+    rng = np.random.RandomState(seed ^ 0x51A2)
+    kernels = _random_kernel_pool(rng, n=4)
+    n_replicas = int(rng.choice([2, 3, 4]))
+    srv = ShardedOverlayServer(
+        n_replicas=n_replicas, bank_capacity=3, round_kernels=2,
+        max_inflight=int(rng.choice([1, 2, 3])),
+        quantum_tiles=float(rng.choice([2.0, 8.0])) if rng.rand() < 0.5
+        else None,
+        migrate_min_tiles=int(rng.choice([2, 10_000])))
+    ov = Overlay()
+
+    def oracle(k, xs):
+        [ys] = ov.dispatch(ov.load_many([k], capacity=4), [(k, xs)])
+        return [np.asarray(y) for y in ys]
+
+    pending: dict[int, tuple] = {}      # ticket -> (kernel, xs)
+    delivered: dict[int, list] = {}
+
+    def check(results):
+        for t, ys in results.items():
+            k, xs = pending.pop(t)
+            delivered[t] = ys
+            for y, want in zip(ys, oracle(k, xs)):
+                np.testing.assert_array_equal(np.asarray(y), want)
+
+    for _step in range(24):
+        action = rng.choice(["submit", "drain", "load", "result"],
+                            p=[0.6, 0.15, 0.15, 0.1])
+        if action == "submit":
+            k = kernels[rng.randint(len(kernels))]
+            xs = _inputs(k.dfg, int(rng.randint(1 << 30)),
+                         batch=int(rng.choice([33, 64, 128])))
+            t = srv.submit(k, xs, tenant=f"t{rng.randint(3)}")
+            pending[t] = (k, xs)
+        elif action == "drain" and pending:
+            mode = rng.choice(["flush", "flush_sync", "as_completed"])
+            if mode == "flush":
+                check(srv.flush())
+            elif mode == "flush_sync":
+                check(srv.flush_sync())
+            else:
+                check(dict(srv.as_completed()))
+        elif action == "load":
+            # directly churn a random replica's bank: evictions bump the
+            # residency generation and stale out the directory's entries
+            bank = srv.banks[rng.randint(n_replicas)]
+            try:
+                bank.load(kernels[rng.randint(len(kernels))])
+            except Exception:       # all-pinned bank mid-flight is legal
+                pass
+        elif action == "result" and pending:
+            t = list(pending)[rng.randint(len(pending))]
+            k, xs = pending[t]
+            check({t: srv.result(t)})
+    check(srv.flush())
+    assert not pending and srv.pending == 0
+    for bank in srv.banks:
+        assert bank.n_pinned == 0
+
+    # deterministic stale-fallback coverage in EVERY example: publish a
+    # residency, evict it behind the directory's back, and require the
+    # router to detect the generation mismatch and re-route
+    k_stale = kernels[0]
+    t = srv.submit(k_stale, _inputs(k_stale.dfg, seed, batch=64))
+    rep = srv.record(t)["replica"]
+    srv.flush()
+    bank = srv.banks[rep]
+    while bank.peek(k_stale) is not None:   # churn until evicted
+        bank.load(kernels[rng.randint(1, len(kernels))])
+    n_stale0 = srv.directory.n_stale
+    xs = _inputs(k_stale.dfg, seed + 1, batch=64)
+    t2 = srv.submit(k_stale, xs)
+    assert srv.directory.n_stale == n_stale0 + 1
+    for y, want in zip(srv.flush()[t2], oracle(k_stale, xs)):
+        np.testing.assert_array_equal(np.asarray(y), want)

@@ -1,0 +1,366 @@
+"""Differential harness: sharded multi-device serving vs the single-bank
+oracle.
+
+Every workload here is served twice — through ``ShardedOverlayServer``
+(2/4/8 replicas, each with its own device-pinned ``ContextBank``) and
+through the single-bank ``OverlayServer`` barrier drain — and the results
+must agree BIT FOR BIT.  The computation is elementwise f32 either way;
+residency routing, replica placement, migration, and round formation must
+never change a single bit of any tenant's outputs.
+
+Replica count deliberately does NOT require real devices: replicas wrap
+onto the live device list (``make_serving_mesh``), so the whole matrix
+runs on single-device CI.  The ``JAX_DEVICES=8`` CI job re-runs it with 8
+fake host devices and the device-placement assertions (marked
+``multi_device``) become live.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.bank import BankDirectory, ContextBank
+from repro.core.overlay import Overlay, compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.core.vm import pad_inputs
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.serve import OverlayServer, ShardedOverlayServer
+
+ALL_NAMES = BENCH_NAMES + ("gradient",)
+
+
+@pytest.fixture(scope="module")
+def kernels():
+    return {n: compile_program(benchmark(n)) for n in ALL_NAMES}
+
+
+def _xs(kernel, batch, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+            for _ in kernel.dfg.inputs]
+
+
+def _zipf_workload(kernels, n_requests, n_tenants=6, s=1.3, seed=0):
+    """Skewed multi-tenant mix: tenants pick kernels zipf-style, so a few
+    (tenant, kernel) pairs dominate — the residency router's bread and
+    butter."""
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    ranks = np.arange(1, len(names) + 1, dtype=np.float64)
+    p = (1.0 / ranks ** s)
+    p /= p.sum()
+    work = []
+    for i in range(n_requests):
+        tenant = f"tenant{i % n_tenants}"
+        # each tenant has its own zipf head: rotate the name list
+        rot = names[i % n_tenants:] + names[:i % n_tenants]
+        k = kernels[rot[rng.choice(len(names), p=p)]]
+        batch = int(rng.choice([48, 64, 96, 128]))
+        work.append((tenant, k, _xs(k, batch, seed * 1000 + i)))
+    return work
+
+
+def _serve_differential(srv, workload, drain="flush"):
+    """Run one workload through ``srv`` and the single-bank oracle; assert
+    bit-for-bit parity; return the sharded results keyed by ticket."""
+    oracle = OverlayServer(bank_capacity=max(16, len(ALL_NAMES)))
+    pairs = []
+    for tenant, k, xs in workload:
+        pairs.append((srv.submit(k, xs, tenant=tenant),
+                      oracle.submit(k, xs, tenant=tenant), k))
+    if drain == "flush":
+        got = srv.flush()
+    elif drain == "flush_sync":
+        got = srv.flush_sync()
+    else:  # as_completed
+        got = dict(srv.as_completed())
+    want = oracle.flush_sync()
+    assert set(got) == {gt for gt, _, _ in pairs}
+    for gt, ot, k in pairs:
+        assert len(got[gt]) == len(k.dfg.outputs)
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+    return got
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("n_replicas", [2, 4, 8])
+def test_sharded_bit_parity_all_drains(kernels, n_replicas):
+    """The whole mixed-kernel suite through R replicas == single bank, for
+    every delivery path."""
+    for drain in ("flush", "flush_sync", "as_completed"):
+        srv = ShardedOverlayServer(n_replicas=n_replicas, bank_capacity=4,
+                                   round_kernels=2, max_inflight=2)
+        _serve_differential(
+            srv, _zipf_workload(kernels, 27, seed=n_replicas), drain=drain)
+        assert srv.pending == 0
+        for bank in srv.banks:
+            assert bank.n_pinned == 0
+
+
+@pytest.mark.parametrize("n_replicas", [2, 4])
+def test_sharded_result_api_parity(kernels, n_replicas):
+    srv = ShardedOverlayServer(n_replicas=n_replicas, bank_capacity=4)
+    work = _zipf_workload(kernels, 10, seed=7)
+    tickets = [(srv.submit(k, xs, tenant=t), k, xs) for t, k, xs in work]
+    for gt, k, xs in reversed(tickets):      # out-of-order claims
+        got = srv.result(gt)
+        ov = Overlay()
+        [want] = ov.dispatch(ContextBank(4), [(k, xs)])
+        for y, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+        with pytest.raises(KeyError):
+            srv.result(gt)                   # claimed once
+    with pytest.raises(KeyError):
+        srv.result(123456)
+
+
+def test_sharded_interleaved_submit_and_stream(kernels):
+    """as_completed across replicas picks up mid-iteration submits."""
+    srv = ShardedOverlayServer(n_replicas=3, bank_capacity=4)
+    k1, k2 = kernels["chebyshev"], kernels["poly6"]
+    t1 = srv.submit(k1, _xs(k1, 64, 0))
+    seen = []
+    it = srv.as_completed()
+    seen.append(next(it)[0])
+    t2 = srv.submit(k2, _xs(k2, 64, 1))
+    seen.extend(t for t, _ in it)
+    assert seen == [t1, t2]
+
+
+# ---------------------------------------------------------------- residency
+def test_residency_hit_rate_under_zipf_mix(kernels):
+    """After a warmup wave publishes every working set, routing is >90%
+    residency hits (the acceptance bar) — repeat traffic lands on the
+    replica already holding its context."""
+    srv = ShardedOverlayServer(n_replicas=4, bank_capacity=4)
+    srv.flush()  # no-op drain on an idle server must be fine
+    for wave in range(3):
+        for t, k, xs in _zipf_workload(kernels, 40, seed=wave):
+            srv.submit(k, xs, tenant=t)
+        srv.flush()
+        if wave == 0:
+            srv.reset_metrics()              # warmup wave = all misses
+    assert srv.n_route_hits + srv.n_route_misses == 80
+    assert srv.residency_hit_rate > 0.9, srv.stats()
+    # aggregate residency really is sharded, not replicated: each context
+    # has one home (plus at most a migration copy)
+    resident = [set(b.resident) for b in srv.banks]
+    total = sum(len(r) for r in resident)
+    assert total <= len(ALL_NAMES) + srv.n_migrations
+
+
+def test_directory_stale_entry_falls_back(kernels):
+    """Evicting a context behind the directory's back (generation bump)
+    must surface as a clean stale->miss fallback, never a wrong-slot
+    dispatch."""
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=2)
+    a, b, c = (kernels[n] for n in ("chebyshev", "poly5", "poly6"))
+    ta = srv.submit(a, _xs(a, 64, 0))
+    rep = srv.record(ta)["replica"]
+    srv.flush()
+    # churn the owning bank directly until A is evicted (stale directory)
+    bank = srv.banks[rep]
+    for extra in (b, c):
+        bank.load(extra)
+    assert bank.peek(a) is None
+    n_stale0 = srv.directory.n_stale
+    xs = _xs(a, 64, 1)
+    t2 = srv.submit(a, xs)
+    assert srv.directory.n_stale == n_stale0 + 1
+    got = srv.flush()[t2]
+    ov = Overlay()
+    [want] = ov.dispatch(ContextBank(4), [(a, xs)])
+    for y, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+def test_directory_generation_validation_unit(kernels):
+    bank0, bank1 = ContextBank(2), ContextBank(2)
+    d = BankDirectory()
+    a, b, c = (kernels[n] for n in ("chebyshev", "poly5", "poly6"))
+    bank1.load(a)
+    d.publish_current(a, 1, bank1)
+    assert d.locate(a, [bank0, bank1]) == 1
+    # eviction on the owner invalidates the entry
+    bank1.load(b)
+    bank1.load(c)                            # evicts a (capacity 2)
+    assert bank1.peek(a) is None
+    assert d.locate(a, [bank0, bank1]) is None and d.n_stale == 1
+    assert len(d) == 0                       # stale entries are dropped
+    # evict-and-RELOAD is also stale: the generation moved
+    bank1.load(a)
+    d.publish(a, 1, bank1.peek(a)[0], bank1.peek(a)[1] - 1)
+    assert d.locate(a, [bank0, bank1]) is None and d.n_stale == 2
+    # peek never touches LRU order
+    bank0.load(a)
+    bank0.load(b)
+    lru_before = bank0.resident
+    assert bank0.peek(a) is not None
+    assert bank0.resident == lru_before
+
+
+# ---------------------------------------------------------------- migration
+def test_migration_under_load(kernels):
+    """A hot context on an overloaded replica is re-homed to the coolest
+    replica; traffic follows it and results stay bit-exact."""
+    k = kernels["chebyshev"]
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=4,
+                               migrate_min_tiles=4, migrate_factor=2.0,
+                               migrate_cooldown=64)
+    tickets = [srv.submit(k, _xs(k, 128, i)) for i in range(12)]
+    homes = [srv._owner[t][0] for t in tickets]
+    assert srv.n_migrations >= 1
+    assert len(set(homes)) == 2              # traffic moved replicas
+    # cooldown: exactly one migration within the window
+    assert srv.n_migrations == 1
+    # the directory now points at the new home
+    assert srv.directory.locate(k, srv.banks) == homes[-1]
+    got = srv.flush()
+    ov = Overlay()
+    for i, t in enumerate(tickets):
+        [want] = ov.dispatch(ContextBank(4), [(k, _xs(k, 128, i))])
+        for y, w in zip(got[t], want):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+def test_no_migration_when_balanced(kernels):
+    """Balanced replicas never migrate (hysteresis floor)."""
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=4,
+                               migrate_min_tiles=1000)
+    for i in range(20):
+        k = kernels[ALL_NAMES[i % 4]]
+        srv.submit(k, _xs(k, 64, i))
+    srv.flush()
+    assert srv.n_migrations == 0
+
+
+# ------------------------------------------------ eviction/in-flight safety
+def test_eviction_never_touches_inflight_per_replica(kernels):
+    """Under per-replica LRU pressure, every in-flight round's contexts
+    stay pinned in that replica's bank until delivery — probed live at
+    each streaming step, then globally at the end."""
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=2,
+                               round_kernels=1, max_inflight=2)
+    reqs = {}
+    for i in range(16):
+        k = kernels[ALL_NAMES[i % len(ALL_NAMES)]]
+        xs = _xs(k, 64, i)
+        reqs[srv.submit(k, xs)] = (k, xs)
+    got = {}
+    for t, outs in srv.as_completed():
+        got[t] = outs
+        for rep in srv.replicas:
+            for inf in rep._inflight:
+                for g in inf.plan.groups:
+                    assert rep.bank.is_pinned(g.kernel), (
+                        "in-flight context lost its pin")
+    assert set(got) == set(reqs)
+    assert sum(b.n_evictions for b in srv.banks) >= 4  # pressure was real
+    for bank in srv.banks:
+        assert bank.n_pinned == 0
+    ov = Overlay()
+    for t, (k, xs) in reqs.items():
+        [want] = ov.dispatch(ContextBank(4), [(k, xs)])
+        for y, w in zip(got[t], want):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+# ----------------------------------------------------- shared admission
+def test_sharded_admission_spans_replicas(kernels):
+    """One tenant's token bucket is global: it cannot reset its rate by
+    hitting kernels that live on different replicas."""
+    from repro.launch.serve import AdmissionError
+
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = FakeClock()
+    srv = ShardedOverlayServer(n_replicas=4, bank_capacity=4, clock=clock,
+                               admission={"metered": (1.0, 2.0)})
+    ks = [kernels[n] for n in ("chebyshev", "poly5", "poly6")]
+    srv.submit(ks[0], _xs(ks[0], 64, 0), tenant="metered")
+    srv.submit(ks[1], _xs(ks[1], 64, 1), tenant="metered")
+    with pytest.raises(AdmissionError):
+        srv.submit(ks[2], _xs(ks[2], 64, 2), tenant="metered")
+    srv.submit(ks[2], _xs(ks[2], 64, 3), tenant="free")
+    clock.t += 1.0
+    srv.submit(ks[2], _xs(ks[2], 64, 4), tenant="metered")
+    assert len(srv.flush()) == 4
+
+
+# ------------------------------------------- single-device assumption fixes
+def test_bank_pinned_to_explicit_device_dispatch_parity(kernels):
+    """Regression: a ContextBank committed to a non-default device must
+    serve dispatch correctly (inputs are co-located with the bank, not
+    implicitly placed on the default device)."""
+    dev = jax.devices()[-1]
+    ov = Overlay()
+    bank = ContextBank(4, device=dev)
+    pairs = [(kernels["chebyshev"], _xs(kernels["chebyshev"], 200, 1)),
+             (kernels["poly6"], _xs(kernels["poly6"], 33, 2))]
+    got = ov.dispatch(bank, pairs)
+    want = ov.dispatch(ContextBank(4), pairs)
+    for g, w in zip(got, want):
+        for y, ref in zip(g, w):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    assert all(next(iter(leaf.devices())) == dev for leaf in bank.tree())
+    # context writes (loads/evictions) stay on the pinned device
+    bank2 = ContextBank(1, device=dev)
+    bank2.load(kernels["poly5"])
+    bank2.load(kernels["poly6"])             # eviction writes a new slot
+    assert next(iter(bank2.op.devices())) == dev
+
+
+def test_overlay_pinned_single_kernel_path(kernels):
+    """Regression: the single-context path (load + __call__) honours the
+    overlay's device pin end to end."""
+    dev = jax.devices()[-1]
+    ov = Overlay(device=dev)
+    k = kernels["qspline"]
+    xs = _xs(k, 96, 5)
+    ctx = ov.load(k)
+    assert next(iter(ctx.op.devices())) == dev
+    got = ov(ctx, xs)
+    assert all(next(iter(y.devices())) == dev for y in got)
+    want = Overlay()(Overlay().load(k), xs)
+    for y, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+def test_pad_inputs_device_placement():
+    dev = jax.devices()[-1]
+    x = pad_inputs([np.ones(8, np.float32)], device=dev)
+    assert next(iter(x.devices())) == dev
+
+
+def test_make_serving_mesh_wraps_and_validates():
+    devs = make_serving_mesh(5)
+    assert len(devs) == 5
+    live = jax.devices()
+    assert [d.id for d in devs] == [live[i % len(live)].id for i in range(5)]
+    assert len(make_serving_mesh()) == len(live)
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+
+
+# -------------------------------------------------------- real multi-device
+def test_replica_banks_land_on_distinct_devices(kernels, multi_device):
+    """With real (fake-host) devices, each replica's working set is
+    committed to its own device and execution happens there."""
+    n = min(multi_device, 4)
+    srv = ShardedOverlayServer(n_replicas=n, bank_capacity=4)
+    ids = [next(iter(b.op.devices())).id for b in srv.banks]
+    assert len(set(ids)) == n
+    work = _zipf_workload(kernels, 12, seed=3)
+    tickets = {srv.submit(k, xs, tenant=t): (t, k, xs)
+               for t, k, xs in work}
+    got = srv.flush()
+    assert set(got) == set(tickets)
+    # every replica that served traffic produced results on its own device
+    for t in tickets:
+        rep = srv._owner.get(t)
+        assert rep is None or rep[0] < n
