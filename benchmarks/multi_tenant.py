@@ -25,10 +25,26 @@ eviction counts, and can JSON-dump the row for the bench trajectory
 (``--json``).  Set ``JAX_DEVICES=N`` to run against N fake host devices
 (see tests/conftest.py); replicas wrap when there are fewer.
 
+``--steal`` runs the WORK-STEALING study instead: a backlog aimed
+entirely at one replica's resident kernels, drained twice through
+identical fleets — once with the residency-only router (the backlogged
+replica grinds alone while the rest idle) and once with the
+work-stealing router (idle replicas pull whole queued kernel-groups,
+contexts prefetched before the move, directory republished).  Stealing
+must win on throughput (asserted, ``--tolerance`` slack) and every
+stolen result must stay bit-identical to the single-bank oracle
+(asserted).  Per-replica scheduling stats are printed for both arms.
+
+``--policy {drr,coalesce,dynamic}`` swaps the round-formation policy
+(``repro.sched.rounds``) under the serving studies.
+
 Run: PYTHONPATH=src python -m benchmarks.multi_tenant [--percentiles]
      PYTHONPATH=src python -m benchmarks.multi_tenant --replicas 4 \
          --json artifacts/bench/sharded.json
-Reading the output: docs/SERVING.md#reading-the-benchmark.
+     JAX_DEVICES=2 PYTHONPATH=src python -m benchmarks.multi_tenant \
+         --steal --replicas 4 --json artifacts/bench/steal.json
+Reading the output: docs/SERVING.md#reading-the-benchmark and
+docs/SCHEDULING.md#the-stealing-study.
 """
 
 import argparse
@@ -148,13 +164,14 @@ def _tenant_workload(kernels, reqs_per_tenant=100, seed=0):
     return plan
 
 
-def _make_server(kernels):
+def _make_server(kernels, policy=None):
     # bank holds every kernel (no eviction noise); rounds of 3 kernels so a
     # drain is several rounds deep — the pipelined path needs rounds to
     # overlap, the sync path pays a host/device barrier per round; the DRR
     # quantum splits each tenant's backlog across rounds
     return OverlayServer(bank_capacity=len(kernels), round_kernels=3,
-                         max_inflight=3, quantum_tiles=48)
+                         max_inflight=3, quantum_tiles=48,
+                         round_policy=policy)
 
 
 def _jain(values) -> float:
@@ -181,7 +198,8 @@ def _drain_metrics(srv, drain, workload) -> tuple[float, dict]:
                                     for v in per_tenant.values())}
 
 
-def bench_latency(kernels, reqs_per_tenant=100, reps=PCT_REPS):
+def bench_latency(kernels, reqs_per_tenant=100, reps=PCT_REPS,
+                  policy=None):
     """Paired pipelined-vs-sync drain study over one tenant workload.
 
     Reps alternate sync/pipelined so machine drift hits both equally; the
@@ -189,7 +207,8 @@ def bench_latency(kernels, reqs_per_tenant=100, reps=PCT_REPS):
     structural cost difference from shared-runner noise.
     """
     workload = _tenant_workload(kernels, reqs_per_tenant)
-    srv_pipe, srv_sync = _make_server(kernels), _make_server(kernels)
+    srv_pipe = _make_server(kernels, policy)
+    srv_sync = _make_server(kernels, policy)
     for srv, drain in ((srv_pipe, srv_pipe.flush),
                        (srv_sync, srv_sync.flush_sync)):
         for tenant, k, xs in workload:   # warmup: compiles bucket family
@@ -216,7 +235,7 @@ def bench_latency(kernels, reqs_per_tenant=100, reps=PCT_REPS):
     return rows
 
 
-def percentiles_main(reqs_per_tenant=100, tolerance=1.0):
+def percentiles_main(reqs_per_tenant=100, tolerance=1.0, policy=None):
     """Latency study; asserts ``pipe_wall < sync_wall * tolerance``.
 
     ``tolerance`` > 1 loosens the win assertion for noisy shared runners
@@ -225,7 +244,7 @@ def percentiles_main(reqs_per_tenant=100, tolerance=1.0):
     """
     kernels = {n: compile_program(benchmark(n))
                for n in BENCH_NAMES + ("gradient",)}
-    rows = bench_latency(kernels, reqs_per_tenant)
+    rows = bench_latency(kernels, reqs_per_tenant, policy=policy)
     print("mode,wall_s,p50_ms,p95_ms,p99_ms,fairness_index,requests,"
           "rounds_per_drain")
     for r in rows:
@@ -275,7 +294,8 @@ def _zipf_workload(kernels, n_requests, n_tenants=SHARD_TENANTS,
     return work
 
 
-def bench_sharded(kernels, replicas, n_requests=240, backend="jnp"):
+def bench_sharded(kernels, replicas, n_requests=240, backend="jnp",
+                  policy=None):
     """Paired sharded-vs-single throughput over one skewed workload.
 
     Both servers get identical per-engine knobs; the sharded fleet's only
@@ -285,9 +305,11 @@ def bench_sharded(kernels, replicas, n_requests=240, backend="jnp"):
     work = _zipf_workload(kernels, n_requests)
     srv_sh = ShardedOverlayServer(
         n_replicas=replicas, bank_capacity=SHARD_BANK_CAPACITY,
-        round_kernels=3, max_inflight=2, backend=backend)
+        round_kernels=3, max_inflight=2, backend=backend,
+        round_policy=policy)
     srv_1 = OverlayServer(bank_capacity=SHARD_BANK_CAPACITY,
-                          round_kernels=3, max_inflight=2, backend=backend)
+                          round_kernels=3, max_inflight=2, backend=backend,
+                          round_policy=policy)
     walls = {"sharded": [], "single": []}
     for srv, mode in ((srv_1, "single"), (srv_sh, "sharded")):
         for tenant, k, xs in work:          # warmup: compile + residency
@@ -322,13 +344,13 @@ def bench_sharded(kernels, replicas, n_requests=240, backend="jnp"):
 
 
 def sharded_main(replicas, n_requests=240, backend="jnp",
-                 tolerance=1.0, json_path=None):
+                 tolerance=1.0, json_path=None, policy=None):
     """Sharded study; asserts aggregate throughput >= single-bank baseline
     (x ``tolerance`` slack for noisy shared runners) and residency
     hit-rate > 0.9 after warmup."""
     kernels = {n: compile_program(benchmark(n))
                for n in BENCH_NAMES + ("gradient",)}
-    row = bench_sharded(kernels, replicas, n_requests, backend)
+    row = bench_sharded(kernels, replicas, n_requests, backend, policy)
     print("replicas,devices,sharded_rps,single_rps,speedup,"
           "residency_hit_rate,migrations,sharded_evictions,single_evictions")
     print(f"{row['replicas']},{row['devices']},{row['sharded_rps']:.1f},"
@@ -362,6 +384,193 @@ def sharded_main(replicas, n_requests=240, backend="jnp",
             row["residency_hit_rate"])
 
 
+# ----------------------------------------------------- work-stealing study
+#: fraction of the stealing-study burst aimed at the hot replica's
+#: resident kernels; the rest spreads so the fleet is live but idle-ish
+STEAL_HOT_FRACTION = 0.85
+#: paired reps for the stealing study (best-of-reps comparison)
+STEAL_REPS = 5
+
+
+def _skew_workload(kernels, homes, n_requests, seed=0):
+    """A burst aimed at the replica owning the most contexts: the
+    traffic shape residency-only routing cannot rebalance (the backlog is
+    already queued where the contexts live) and work stealing exists for."""
+    rng = np.random.RandomState(seed)
+    by_home: dict = {}
+    for n, h in homes.items():
+        by_home.setdefault(h, []).append(n)
+    hot_rep, hot_names = max(by_home.items(), key=lambda kv: len(kv[1]))
+    cold_names = [n for n, h in homes.items() if h != hot_rep]
+    work = []
+    for i in range(n_requests):
+        if not cold_names or rng.uniform() < STEAL_HOT_FRACTION:
+            name = hot_names[i % len(hot_names)]
+        else:
+            name = cold_names[i % len(cold_names)]
+        k = kernels[name]
+        b = int(SHARD_BATCHES[rng.randint(len(SHARD_BATCHES))])
+        xs = [rng.uniform(-2, 2, (b,)).astype(np.float32)
+              for _ in k.dfg.inputs]
+        work.append((f"tenant{i % SHARD_TENANTS}", k, xs))
+    return work, hot_rep
+
+
+def bench_stealing(kernels, replicas, n_requests=240, backend="jnp",
+                   policy=None):
+    """Paired stealing-vs-residency-only study on a skewed backlog.
+
+    Two identical fleets (migration disabled so stealing is the only
+    rebalancer) serve the same burst; the residency-only fleet leaves
+    the backlogged replica to grind alone.  The stealing arm's results
+    are additionally checked bit-for-bit against the single-bank
+    ``flush_sync`` oracle.  Arms interleave over ``STEAL_REPS`` reps and
+    the comparison is BEST-of-reps (min wall) — time-sliced CI hosts
+    make medians noisy.
+    """
+    from repro.launch.mesh import device_sharing
+
+    def build(steal):
+        # tight quantum + small rounds: the hot replica's backlog spans
+        # MANY rounds (as a live multi-tenant server's does) instead of
+        # being swallowed whole into max_inflight giant launches — queued
+        # work must exist across drain passes for a thief to have
+        # anything to pull
+        return ShardedOverlayServer(
+            n_replicas=replicas, bank_capacity=SHARD_BANK_CAPACITY,
+            round_kernels=2, max_inflight=2, quantum_tiles=4.0,
+            backend=backend, round_policy=policy, steal=steal,
+            migrate_min_tiles=10 ** 9)
+
+    srv_steal, srv_resid = build(True), build(False)
+    # identical warmup -> identical homes -> identical workload per arm
+    work = homes = None
+    for srv in (srv_resid, srv_steal):
+        for i, n in enumerate(kernels):
+            srv.submit(kernels[n], [np.zeros(32, np.float32)
+                                    for _ in kernels[n].dfg.inputs])
+        srv.flush()
+        h = {n: srv.directory.locate(kernels[n], srv.banks)
+             for n in kernels}
+        h = {n: r for n, r in h.items() if r is not None}
+        if homes is None:
+            homes = h
+            work, hot_rep = _skew_workload(kernels, homes, n_requests)
+        else:
+            assert h == homes, "arms warmed to different homes"
+    # oracle parity (and compile warmup) on the stealing arm
+    oracle = OverlayServer(bank_capacity=max(16, len(kernels)))
+    pairs = [(srv_steal.submit(k, xs, tenant=t),
+              oracle.submit(k, xs, tenant=t)) for t, k, xs in work]
+    got, want = srv_steal.flush(), oracle.flush_sync()
+    for gt, ot in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+    warmup_steals = srv_steal.n_steals
+    warmup_stolen = srv_steal.router.n_stolen_requests
+    for t, k, xs in work:                    # warm the residency arm too
+        srv_resid.submit(k, xs, tenant=t)
+    srv_resid.flush()
+    srv_steal.reset_metrics()
+    srv_resid.reset_metrics()
+    walls = {"steal": [], "residency": []}
+    # arms interleave per rep (drift hits both) and the comparison uses
+    # best-of-reps: oversubscribed CI hosts time-slice the fake devices,
+    # so min wall isolates the structural difference like bench_latency
+    for _rep in range(STEAL_REPS):
+        for srv, mode in ((srv_resid, "residency"), (srv_steal, "steal")):
+            t0 = time.perf_counter()
+            for t, k, xs in work:
+                srv.submit(k, xs, tenant=t)
+            results = srv.flush()
+            _block(list(results.values()))
+            walls[mode].append(time.perf_counter() - t0)
+    best = {m: min(w) for m, w in walls.items()}
+    return {
+        "replicas": replicas,
+        "devices": jax.device_count(),
+        "device_sharing": device_sharing(srv_steal.devices),
+        "hot_replica": hot_rep,
+        "hot_fraction": STEAL_HOT_FRACTION,
+        "requests_per_drain": len(work),
+        "steal_rps": len(work) / best["steal"],
+        "residency_rps": len(work) / best["residency"],
+        "speedup": best["residency"] / best["steal"],
+        # steals concentrate in the first drains: each steal republishes
+        # the group's directory entry to the thief, so follow-up submits
+        # route there DIRECTLY — the fleet converges to balance and
+        # steady-state drains need few or no further steals
+        "steals_total": warmup_steals + srv_steal.n_steals,
+        "steals_timed": srv_steal.n_steals,
+        "warmup_steals": warmup_steals,
+        "stolen_requests": (warmup_stolen
+                            + srv_steal.router.n_stolen_requests),
+        "hot_replica_share_steal": (
+            srv_steal.replicas[hot_rep].n_requests
+            / max(1, sum(r.n_requests for r in srv_steal.replicas))),
+        "hot_replica_share_residency": (
+            srv_resid.replicas[hot_rep].n_requests
+            / max(1, sum(r.n_requests for r in srv_resid.replicas))),
+        "stats_steal": srv_steal.stats(),
+        "stats_residency": srv_resid.stats(),
+    }
+
+
+def _print_fleet_stats(label, st):
+    """The satellite telemetry: per-replica queue depth, residency
+    hit/miss, rounds, steals — printed so the study is readable."""
+    print(f"# {label}: rounds={st['rounds']} "
+          f"hits={st['route_hits']} misses={st['route_misses']} "
+          f"migrations={st['migrations']} steals={st['steals']}")
+    for i, rep in enumerate(st["per_replica"]):
+        print(f"#   replica {i}: rounds={rep['rounds']} "
+              f"requests={rep['requests']} queued={rep['queued']} "
+              f"queued_tiles={rep['queued_tiles']} "
+              f"evictions={rep['evictions']} policy={rep['round_policy']}")
+
+
+def stealing_main(replicas, n_requests=240, backend="jnp",
+                  tolerance=1.0, json_path=None, policy=None):
+    """Stealing study; asserts steal throughput >= residency-only
+    (x ``tolerance`` slack), at least one steal actually happened, and
+    (inside ``bench_stealing``) bit parity with the single-bank oracle."""
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    row = bench_stealing(kernels, replicas, n_requests, backend, policy)
+    print("replicas,devices,steal_rps,residency_rps,speedup,steals,"
+          "stolen_requests,hot_share_steal,hot_share_residency")
+    print(f"{row['replicas']},{row['devices']},{row['steal_rps']:.1f},"
+          f"{row['residency_rps']:.1f},{row['speedup']:.2f},"
+          f"{row['steals_total']},{row['stolen_requests']},"
+          f"{row['hot_replica_share_steal']:.2f},"
+          f"{row['hot_replica_share_residency']:.2f}")
+    print(f"# work stealing vs residency-only on a "
+          f"{row['hot_fraction']:.0%}-skewed backlog "
+          f"(hot replica {row['hot_replica']}, {row['replicas']} replicas "
+          f"on {row['devices']} devices, sharing {row['device_sharing']}): "
+          f"{row['speedup']:.2f}x; hot replica's request share "
+          f"{row['hot_replica_share_residency']:.0%} -> "
+          f"{row['hot_replica_share_steal']:.0%}; results bit-identical "
+          f"to the single-bank oracle")
+    _print_fleet_stats("steal arm", row["stats_steal"])
+    _print_fleet_stats("residency arm", row["stats_residency"])
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        slim = {k: v for k, v in row.items()
+                if k not in ("stats_steal", "stats_residency")}
+        with open(json_path, "w") as f:
+            json.dump(slim, f, indent=1)
+        print(f"# wrote {json_path}")
+    assert row["steals_total"] >= 1, (
+        "work stealing never triggered on a skewed backlog", row)
+    assert row["steal_rps"] >= row["residency_rps"] * tolerance, (
+        "work stealing did not beat residency-only routing",
+        row["steal_rps"], row["residency_rps"], tolerance)
+    assert (row["hot_replica_share_steal"]
+            < row["hot_replica_share_residency"]), (
+        "stealing left the hot replica's request share unchanged", row)
+
+
 def run():
     kernels = {n: compile_program(benchmark(n))
                for n in BENCH_NAMES + ("gradient",)}
@@ -389,19 +598,32 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=0,
                     help="run the sharded study with this many replicas "
                          "(0 = off); set JAX_DEVICES=N for N fake devices")
+    ap.add_argument("--steal", action="store_true",
+                    help="run the work-stealing study (uses --replicas, "
+                         "default 4) instead of the sharded study")
     ap.add_argument("--requests", type=int, default=240,
-                    help="requests per drain for --replicas")
+                    help="requests per drain for --replicas/--steal")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
-                    help="executor backend for --replicas (pallas runs in "
-                         "interpret mode off-TPU)")
+                    help="executor backend for --replicas/--steal (pallas "
+                         "runs in interpret mode off-TPU)")
+    ap.add_argument("--policy", default=None,
+                    choices=("drr", "coalesce", "dynamic"),
+                    help="round-formation policy for the serving studies "
+                         "(default: REPRO_ROUND_POLICY env or drr)")
     ap.add_argument("--json", default=None,
-                    help="dump the --replicas study row to this JSON path")
+                    help="dump the --replicas/--steal study row to this "
+                         "JSON path")
     args = ap.parse_args(argv)
+    if args.steal:
+        return stealing_main(args.replicas or 4, args.requests,
+                             args.backend, args.tolerance, args.json,
+                             args.policy)
     if args.replicas:
         return sharded_main(args.replicas, args.requests, args.backend,
-                            args.tolerance, args.json)
+                            args.tolerance, args.json, args.policy)
     if args.percentiles:
-        return percentiles_main(args.requests_per_tenant, args.tolerance)
+        return percentiles_main(args.requests_per_tenant, args.tolerance,
+                                args.policy)
     header, rows, rps_bank, rps_load, rps_jit, retraces = run()
     print(",".join(header))
     for r in rows:

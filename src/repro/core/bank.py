@@ -338,9 +338,10 @@ class ContextBank:
 
     def stats(self) -> dict:
         return {"capacity": self.capacity, "resident": len(self),
-                "loads": self.n_loads, "evictions": self.n_evictions,
-                "hits": self.n_hits, "pinned": self.n_pinned,
-                "generation": self.generation}
+                "free": len(self._free), "loads": self.n_loads,
+                "evictions": self.n_evictions, "hits": self.n_hits,
+                "pinned": self.n_pinned, "generation": self.generation,
+                "ctx_cache": len(self._ctx_cache)}
 
 
 # ================================================================ directory
@@ -368,7 +369,10 @@ class BankDirectory:
     slot that now holds another tenant's context.
 
     ``publish`` after a load/prefetch records the fresh residency;
-    ``drop`` forgets a key (e.g. when a migration retires the old owner).
+    ``drop`` forgets a key (e.g. when a migration retires the old owner);
+    ``republish_current`` is the work-stealing/migration hook — it moves
+    a key's published home to a new replica (which must already hold the
+    context) and counts the move, so routing follows stolen work.
     """
 
     def __init__(self):
@@ -376,6 +380,7 @@ class BankDirectory:
         self.n_fresh = 0
         self.n_stale = 0
         self.n_unknown = 0
+        self.n_republished = 0
 
     def __len__(self) -> int:
         return len(self._map)
@@ -393,6 +398,15 @@ class BankDirectory:
         if res is None:
             raise BankError("publish_current: kernel is not resident")
         self.publish(kernel, replica, res[0], res[1])
+
+    def republish_current(self, kernel, replica: int,
+                          bank: ContextBank) -> None:
+        """Move a key's published home to ``replica`` (steal/migration):
+        ``publish_current`` plus a republish count.  The context must
+        already be resident in ``bank`` — callers prefetch BEFORE moving
+        work, so a failed prefetch never strands the directory entry."""
+        self.publish_current(kernel, replica, bank)
+        self.n_republished += 1
 
     def drop(self, kernel) -> None:
         self._map.pop(context_key(getattr(kernel, "program", kernel)), None)
@@ -424,4 +438,5 @@ class BankDirectory:
 
     def stats(self) -> dict:
         return {"entries": len(self._map), "fresh": self.n_fresh,
-                "stale": self.n_stale, "unknown": self.n_unknown}
+                "stale": self.n_stale, "unknown": self.n_unknown,
+                "republished": self.n_republished}

@@ -40,6 +40,22 @@ def make_serving_mesh(n_replicas: int | None = None, devices=None):
     return [devices[i % len(devices)] for i in range(n_replicas)]
 
 
+def device_sharing(devices) -> dict[int, int]:
+    """How many serving replicas share each physical device.
+
+    ``{device id: replica count}`` for a ``make_serving_mesh`` placement
+    list.  Counts > 1 mean replicas wrap onto one device (CI fake-device
+    runs, oversubscribed fleets): correctness is unchanged, but
+    cross-replica overlap — the effect the sharded and work-stealing
+    benchmarks measure — is then time-sliced, not parallel, which is why
+    the benchmarks print this next to their speedups.
+    """
+    sharing: dict[int, int] = {}
+    for d in devices:
+        sharing[d.id] = sharing.get(d.id, 0) + 1
+    return sharing
+
+
 def make_mesh_from_devices(devices, model_parallel: int = 16):
     """Elastic re-mesh: build the largest (data, model) mesh from a live
     device list (used by distributed.elastic on simulated failures)."""

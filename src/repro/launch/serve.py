@@ -22,30 +22,34 @@ pipeline (``Overlay.plan/assemble/execute/collect``, see core/overlay.py):
   (JAX dispatch is async — ``jax.block_until_ready`` happens only at
   result delivery).  ``flush_sync()`` keeps the old drain-the-queue
   barrier loop as the bit-for-bit oracle and benchmark baseline.
-* Scheduling policy: per-tenant token-bucket ADMISSION CONTROL (``submit``
-  raises ``AdmissionError`` when a tenant exceeds its rate) and
-  deficit-round-robin across tenants when forming rounds, so a hot tenant
-  with a bank-resident working set cannot starve cold tenants.
+* Scheduling DECISIONS are pluggable policies from :mod:`repro.sched`
+  (the engine here is only the mechanics — queues, staged launch,
+  pinning, tickets): per-tenant token-bucket ADMISSION
+  (``sched.admission``), round formation via a ``RoundPolicy``
+  (``sched.rounds``: deficit round-robin by default, cross-tenant
+  coalescing and latency-adaptive round sizing as drop-ins), and — for
+  the sharded fleet — replica ROUTING via a ``RouterPolicy``
+  (``sched.routing``: residency affinity, optionally with cross-replica
+  work stealing).  ``sched.pump.AutoPump`` wraps either engine with a
+  background drain thread so concurrent ``submit`` makes progress
+  without an explicit ``flush``.
 * In-flight rounds pin their contexts in the ``ContextBank`` so LRU
   eviction can never reassign a slot under a launched round.
 
 ``ShardedOverlayServer`` scales the engine across devices: N replicas
 (each an ``OverlayServer`` pinned to one device of
-``launch.mesh.make_serving_mesh`` with its own bank) behind a
-residency-aware router — a shared ``core.bank.BankDirectory`` routes each
-request to the replica already holding its context (entries validated by
-residency generation), falls back least-loaded on miss/stale, migrates
-hot contexts, and applies admission globally.  Results stay bit-for-bit
-identical to the single-bank engine (tests/test_sharded_serving.py).
+``launch.mesh.make_serving_mesh`` with its own bank) behind the router
+policy.  Results stay bit-for-bit identical to the single-bank engine
+(tests/test_sharded_serving.py, tests/test_sched_policies.py).
 
-See docs/SERVING.md for the full guide.
+See docs/SERVING.md for the engine guide and docs/SCHEDULING.md for the
+policy interfaces.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import math
 import sys
 import time
 from collections import OrderedDict, deque
@@ -54,144 +58,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-#: tenant label used when ``submit`` is not given one
-DEFAULT_TENANT = "default"
+from repro.sched import (AdmissionControl, AdmissionError, AutoPump,
+                         DeficitRoundRobin, Flow, OverlayRequest,
+                         TokenBucket, make_round_policy, make_router)
+from repro.sched.rounds import DEFAULT_TENANT
 
-
-class AdmissionError(RuntimeError):
-    """A tenant exceeded its token-bucket rate.
-
-    ``retry_after`` is the seconds until the request would be admitted —
-    ``math.inf`` when the request's cost exceeds the bucket's burst, i.e.
-    it can NEVER be admitted under the current policy (don't retry it;
-    split the request or raise the tenant's burst).
-    """
-
-    def __init__(self, tenant: str, retry_after: float):
-        if math.isinf(retry_after):
-            msg = (f"tenant {tenant!r}: request cost exceeds the bucket "
-                   f"burst; it can never be admitted under this policy")
-        else:
-            msg = (f"tenant {tenant!r} over admission rate; "
-                   f"retry in {retry_after:.3f}s")
-        super().__init__(msg)
-        self.tenant = tenant
-        self.retry_after = retry_after
-
-
-class TokenBucket:
-    """Token-bucket rate limiter (tokens = dispatch tiles, see SERVING.md).
-
-    ``rate`` tokens accrue per second up to ``burst``; ``try_acquire``
-    spends tokens if available.  The clock is injectable so tests can
-    advance time deterministically.
-    """
-
-    def __init__(self, rate: float, burst: float | None = None,
-                 clock=time.monotonic):
-        if rate <= 0:
-            raise ValueError(f"rate must be > 0, got {rate}")
-        self.rate = float(rate)
-        self.burst = float(burst if burst is not None else rate)
-        self.tokens = self.burst
-        self.clock = clock
-        self._t = clock()
-
-    def _refill(self) -> None:
-        now = self.clock()
-        self.tokens = min(self.burst, self.tokens + (now - self._t) * self.rate)
-        self._t = now
-
-    def try_acquire(self, cost: float = 1.0) -> bool:
-        self._refill()
-        if self.tokens >= cost:
-            self.tokens -= cost
-            return True
-        return False
-
-    def retry_after(self, cost: float = 1.0) -> float:
-        """Seconds until ``cost`` tokens will be available."""
-        self._refill()
-        return max(0.0, (cost - self.tokens) / self.rate)
-
-
-class AdmissionControl:
-    """Per-tenant token-bucket admission for one serving front-end.
-
-    ``admission`` maps tenant -> TokenBucket (or a ``(rate, burst)`` spec);
-    ``default_admission`` is applied lazily to tenants without an explicit
-    bucket.  Shared by ``OverlayServer`` (single bank) and
-    ``ShardedOverlayServer`` (where admission must span all replicas — a
-    tenant cannot dodge its rate by having its kernels land on different
-    replicas, so the buckets live in the router, not per replica).
-    """
-
-    #: bucket-count high-water mark before lazily-created default buckets
-    #: are pruned — an unbounded tenant-label space must not leak buckets
-    MAX_BUCKETS = 4096
-
-    def __init__(self, admission: dict | None = None,
-                 default_admission: tuple | None = None,
-                 clock=time.monotonic):
-        self.clock = clock
-        self._buckets: dict[str, TokenBucket] = {}
-        for tenant, spec in (admission or {}).items():
-            self._buckets[tenant] = (spec if isinstance(spec, TokenBucket)
-                                     else TokenBucket(*spec, clock=clock))
-        self.default_admission = default_admission
-        self._default_buckets: set[str] = set()
-
-    def admit(self, tenant: str, cost: float) -> None:
-        """Spend ``cost`` tokens from the tenant's bucket or raise
-        :class:`AdmissionError`; tenants with no bucket (and no default
-        policy) are always admitted."""
-        bucket = self._buckets.get(tenant)
-        if bucket is None and self.default_admission is not None:
-            bucket = TokenBucket(*self.default_admission, clock=self.clock)
-            self._buckets[tenant] = bucket
-            self._default_buckets.add(tenant)
-            if len(self._buckets) > self.MAX_BUCKETS:
-                # a refilled-to-burst default bucket carries no state
-                for t in list(self._default_buckets):
-                    b = self._buckets[t]
-                    b._refill()
-                    if t != tenant and b.tokens >= b.burst:
-                        del self._buckets[t]
-                        self._default_buckets.discard(t)
-        if bucket is not None and not bucket.try_acquire(cost):
-            retry = (math.inf if cost > bucket.burst
-                     else bucket.retry_after(cost))
-            raise AdmissionError(tenant, retry)
-
-
-# ===================================================== overlay request engine
-@dataclasses.dataclass
-class OverlayRequest:
-    """One queued kernel invocation: a batch of iterations of one kernel."""
-
-    ticket: int
-    kernel: object            # core.overlay.CompiledKernel
-    xs: list                  # per-primary-input 1-D arrays, equal length
-    tenant: str = DEFAULT_TENANT
-    key: tuple = ()           # context identity (bank.context_key)
-    cost: int = 1             # dispatch tiles this request occupies
-    t_submit: float = 0.0
-
-    @property
-    def name(self) -> str:
-        return self.kernel.program.name
-
-    @property
-    def batch(self) -> int:
-        return int(np.shape(self.xs[0])[0])
-
-
-@dataclasses.dataclass
-class _Flow:
-    """Per-tenant FIFO queue + deficit-round-robin state."""
-
-    queue: deque
-    deficit: float = 0.0
+__all__ = [
+    "AdmissionControl", "AdmissionError", "AutoPump", "DEFAULT_TENANT",
+    "DeficitRoundRobin", "OverlayRequest", "OverlayServer",
+    "ShardedOverlayServer", "TokenBucket", "main", "overlay_demo",
+]
 
 
 @dataclasses.dataclass
@@ -202,6 +78,7 @@ class _Inflight:
     plan: object              # core.overlay.DispatchPlan (holds the pins)
     ys: object                # device result future, or None (empty round)
     round_no: int
+    t_launch: float = 0.0     # engine clock at launch (RoundPolicy.observe)
 
 
 class OverlayServer:
@@ -211,17 +88,19 @@ class OverlayServer:
 
     1. ``submit(kernel, xs, tenant=...)`` — token-bucket admission check,
        then enqueue on the tenant's flow; returns a ticket.
-    2. Round formation — deficit-round-robin across tenant flows picks at
-       most ``round_kernels`` distinct kernels per round; a tenant may
-       spend at most its accumulated deficit (in tiles) per round, so no
-       flow monopolises the bank.
+    2. Round formation — delegated to the injected ``RoundPolicy``
+       (default :class:`~repro.sched.rounds.DeficitRoundRobin`, or the
+       ``REPRO_ROUND_POLICY`` env knob): at most ``round_kernels``
+       distinct kernels per round, policy-specific pacing across tenant
+       flows.
     3. Staged launch — ``Overlay.plan`` (pins contexts, assigns slots) →
        ``assemble`` (host tile stack) → ``execute`` (async device call).
        Up to ``max_inflight`` rounds run concurrently: round N+1 is
        planned/assembled while round N executes on device.
     4. Delivery — ``result(ticket)`` / ``as_completed()`` / ``flush()``
        block (``jax.block_until_ready``) only on the round actually being
-       delivered; per-ticket latency is recorded at that moment.
+       delivered; per-ticket latency is recorded, and the round's tile
+       count + wall time are fed back to ``RoundPolicy.observe``.
 
     ``flush_sync()`` serves the same queue through the one-round-at-a-time
     barrier loop (launch, wait, deliver, repeat) — the bit-for-bit oracle
@@ -234,6 +113,7 @@ class OverlayServer:
                  dtype=jnp.float32, max_outputs: int = 8,
                  max_inflight: int = 2, round_kernels: int | None = None,
                  quantum_tiles: float | None = None,
+                 round_policy=None,
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
                  clock=time.monotonic, metrics_window: int = 65536,
@@ -259,17 +139,31 @@ class OverlayServer:
                 f"got {round_kernels}")
         self.round_kernels = min(round_kernels or bank_capacity,
                                  bank_capacity)
-        #: DRR quantum in tiles; None = unbounded (pure round-robin)
-        if quantum_tiles is not None and quantum_tiles <= 0:
-            raise ValueError(
-                f"quantum_tiles must be > 0 or None (unbounded), got "
-                f"{quantum_tiles}; a non-positive quantum can never cover "
-                f"a request's tile cost")
+        #: DRR quantum in tiles; None = unbounded (pure round-robin).
+        #: Only consulted when no explicit ``round_policy`` is given —
+        #: kept as a constructor knob (and validated here) for
+        #: compatibility with the pre-sched engine surface.
         self.quantum_tiles = quantum_tiles
+        #: the round-formation policy (see repro.sched.rounds).  A string
+        #: picks a registered policy by name; None consults the
+        #: REPRO_ROUND_POLICY env knob (default deficit round-robin).
+        if round_policy is None or isinstance(round_policy, str):
+            round_policy = make_round_policy(round_policy,
+                                             quantum_tiles=quantum_tiles)
+        elif quantum_tiles is not None:
+            # an injected policy instance carries its own quantum; the
+            # engine-level knob would be silently ignored — refuse loudly
+            # rather than drop the fairness bound the caller asked for
+            raise ValueError(
+                "quantum_tiles was given alongside a round_policy "
+                "instance; set the quantum on the policy itself "
+                "(engine-level quantum_tiles only configures the "
+                "default/named policy)")
+        self.round_policy = round_policy
         self.clock = clock
         self.admission = AdmissionControl(admission, default_admission,
                                           clock=clock)
-        self._flows: dict[str, _Flow] = {}
+        self._flows: dict[str, Flow] = {}
         self._rr: deque[str] = deque()      # tenant round-robin order
         self._inflight: deque[_Inflight] = deque()
         self._done: OrderedDict[int, list] = OrderedDict()
@@ -300,15 +194,18 @@ class OverlayServer:
         req = OverlayRequest(ticket=t, kernel=kernel, xs=xs, tenant=tenant,
                              key=context_key(kernel.program), cost=cost,
                              t_submit=self.clock())
-        flow = self._flows.get(tenant)
-        if flow is None:
-            flow = self._flows[tenant] = _Flow(queue=deque())
-            self._rr.append(tenant)
-        flow.queue.append(req)
-        self._pending_tiles += req.cost
+        self._enqueue(req)
         self._records[t] = {"tenant": tenant, "t_submit": req.t_submit,
                             "cost": cost, "t_done": None, "round": None}
         return t
+
+    def _enqueue(self, req: OverlayRequest) -> None:
+        flow = self._flows.get(req.tenant)
+        if flow is None:
+            flow = self._flows[req.tenant] = Flow(queue=deque())
+            self._rr.append(req.tenant)
+        flow.queue.append(req)
+        self._pending_tiles += req.cost
 
     @property
     def pending(self) -> int:
@@ -325,63 +222,70 @@ class OverlayServer:
         scan the queues."""
         return self._pending_tiles
 
+    @property
+    def queued(self) -> int:
+        """Requests queued but not yet launched (excludes in flight)."""
+        return sum(len(f.queue) for f in self._flows.values())
+
+    @property
+    def queued_tiles(self) -> int:
+        """Queued-only work in dispatch tiles — what a work-stealing
+        router may move (in-flight rounds are never stolen).  Scans the
+        queues, so it is read at rebalance time, not per submit."""
+        return sum(r.cost for f in self._flows.values() for r in f.queue)
+
     # ------------------------------------------------------- round formation
-    def _take_from_flow(self, flow: _Flow, keys: set, cap: int) -> list:
-        """DRR service of one flow: whole kernel groups, head-first, until
-        the flow's deficit or the round's distinct-kernel budget runs out.
-
-        Untaken requests keep their ARRIVAL order in the queue (never the
-        grouped order) — a skipped kernel's old request must reach the
-        queue head ahead of newer traffic, or a live stream on one kernel
-        would starve a tenant's own requests on another.
-        """
-        taken: list[OverlayRequest] = []
-        taken_ids: set[int] = set()
-        by_key: OrderedDict[tuple, list] = OrderedDict()
-        for r in flow.queue:
-            by_key.setdefault(r.key, []).append(r)
-        exhausted = False
-        for key, rs in by_key.items():
-            if exhausted or (key not in keys and len(keys) >= cap):
-                continue
-            for r in rs:
-                if flow.deficit >= r.cost:
-                    flow.deficit -= r.cost
-                    keys.add(key)
-                    taken.append(r)
-                    taken_ids.add(r.ticket)
-                else:
-                    exhausted = True
-                    break
-        flow.queue = deque(r for r in flow.queue
-                           if r.ticket not in taken_ids)
-        if not flow.queue:
-            flow.deficit = 0.0          # standard DRR: idle flows reset
-        return taken
-
     def _form_round(self) -> list | None:
-        """Pick the next round via deficit round-robin across tenants."""
+        """Prune drained flows, then ask the round policy for the next
+        round (None = nothing queued)."""
         # prune drained flows: a long-lived server over an unbounded
         # tenant-label space must not scan every tenant ever seen per
         # round (flows are recreated on the tenant's next submit)
         for tenant in [t for t in self._rr if not self._flows[t].queue]:
             del self._flows[tenant]
             self._rr.remove(tenant)
-        if not self._flows:
-            return None
-        cap = self.round_kernels
-        keys: set = set()
-        round_reqs: list[OverlayRequest] = []
-        while not round_reqs:
-            for tenant in list(self._rr):
-                flow = self._flows[tenant]
-                if not flow.queue:
-                    continue
-                flow.deficit = (math.inf if self.quantum_tiles is None
-                                else flow.deficit + self.quantum_tiles)
-                round_reqs.extend(self._take_from_flow(flow, keys, cap))
-        self._rr.rotate(-1)             # a different tenant leads next round
-        return round_reqs
+        return self.round_policy.form_round(self._flows, self._rr,
+                                            self.round_kernels)
+
+    # ---------------------------------------------------------- work stealing
+    def steal_queued(self, key: tuple) -> list[tuple[OverlayRequest, dict]]:
+        """Remove every QUEUED request whose context key is ``key`` and
+        hand back ``(request, telemetry record)`` pairs, per-tenant
+        arrival order preserved.
+
+        The work-stealing router's victim hook: in-flight rounds (and
+        their pins) are untouched — only queued work moves.  The caller
+        must re-home every pair via ``adopt_queued`` on another replica;
+        the tickets in the returned requests are STALE (this engine has
+        forgotten them).
+        """
+        stolen: list[tuple[OverlayRequest, dict]] = []
+        for flow in self._flows.values():
+            if not any(r.key == key for r in flow.queue):
+                continue
+            kept: deque = deque()
+            for r in flow.queue:
+                if r.key == key:
+                    stolen.append((r, self._records.pop(r.ticket)))
+                else:
+                    kept.append(r)
+            flow.queue = kept
+            if not kept:
+                flow.deficit = 0.0      # drained by the steal = idle
+        self._pending_tiles -= sum(r.cost for r, _ in stolen)
+        return stolen
+
+    def adopt_queued(self, req: OverlayRequest, record: dict) -> int:
+        """Enqueue a request stolen from another replica under a fresh
+        local ticket; returns it.  The original submit telemetry
+        (tenant, cost, t_submit) rides along, so delivery latency spans
+        the steal."""
+        t = self._next_ticket
+        self._next_ticket += 1
+        req = dataclasses.replace(req, ticket=t)
+        self._enqueue(req)
+        self._records[t] = record
+        return t
 
     # ------------------------------------------------------ staged pipeline
     def _launch_round(self, reqs: list) -> None:
@@ -411,7 +315,8 @@ class OverlayServer:
         batch = self.overlay.assemble(plan)
         ys = self.overlay.execute(self.bank, batch)
         self._inflight.append(_Inflight(reqs=reqs, plan=plan, ys=ys,
-                                        round_no=self.n_rounds))
+                                        round_no=self.n_rounds,
+                                        t_launch=self.clock()))
         self.n_rounds += 1
 
     def _retire_oldest(self) -> list:
@@ -431,8 +336,15 @@ class OverlayServer:
             rec["round"] = inf.round_no
             tickets.append(r.ticket)
         inf.plan.release(self.bank)
-        self._pending_tiles -= sum(r.cost for r in inf.reqs)
+        round_cost = sum(r.cost for r in inf.reqs)
+        self._pending_tiles -= round_cost
         self.n_requests += len(inf.reqs)
+        # feedback edge: adaptive policies size future rounds off this.
+        # Units are per-request ceil tiles (r.cost) — the SAME units the
+        # policies budget rounds in (and flush_sync reports), never the
+        # plan's merged group tiles, or a budget-vs-observation mismatch
+        # would stall DynamicTilePolicy's growth on sub-tile requests
+        self.round_policy.observe(round_cost, now - inf.t_launch)
         return tickets
 
     def _fill_pipeline(self) -> None:
@@ -442,6 +354,16 @@ class OverlayServer:
                 return
             self._launch_round(reqs)
 
+    def pump_once(self) -> bool:
+        """One unit of drain work: top up the pipeline, deliver the
+        oldest in-flight round.  Returns False when idle (nothing queued,
+        nothing in flight) — the ``sched.pump.AutoPump`` loop edge."""
+        self._fill_pipeline()
+        if not self._inflight:
+            return False
+        self._retire_oldest()
+        return True
+
     def _note_claimed(self, tickets) -> None:
         """Record claims and prune telemetry beyond ``metrics_window``."""
         self._claimed.extend(tickets)
@@ -449,6 +371,19 @@ class OverlayServer:
             self._records.pop(self._claimed.popleft(), None)
 
     # -------------------------------------------------------------- retrieve
+    def try_result(self, ticket: int):
+        """Non-blocking claim: the ticket's outputs if already delivered,
+        else None (still queued or in flight).  Raises KeyError for
+        unknown or already-claimed tickets, like ``result``."""
+        if ticket in self._done:
+            self._note_claimed([ticket])
+            return self._done.pop(ticket)
+        if ticket not in self._records:
+            raise KeyError(f"unknown ticket {ticket}")
+        if self._records[ticket]["t_done"] is not None:
+            raise KeyError(f"ticket {ticket} already claimed")
+        return None
+
     def result(self, ticket: int):
         """Block until ``ticket``'s outputs are ready and return them.
 
@@ -456,7 +391,7 @@ class OverlayServer:
         ticket can be claimed once, via ``result``/``as_completed``/
         ``flush``).
         """
-        if ticket not in self._records:
+        if ticket not in self._records and ticket not in self._done:
             raise KeyError(f"unknown ticket {ticket}")
         while ticket not in self._done:
             if self._records[ticket]["t_done"] is not None:
@@ -521,6 +456,7 @@ class OverlayServer:
             self._retire_oldest()
         results: dict[int, list] = {}
         while (reqs := self._form_round()) is not None:
+            t_launch = self.clock()
             outs = self.overlay.dispatch(
                 self.bank, [(r.kernel, r.xs) for r in reqs], tile=self.tile)
             jax.block_until_ready([y for ys in outs for y in ys])
@@ -532,6 +468,8 @@ class OverlayServer:
             self.n_rounds += 1
             self._pending_tiles -= sum(r.cost for r in reqs)
             self.n_requests += len(reqs)
+            self.round_policy.observe(sum(r.cost for r in reqs),
+                                      now - t_launch)
         results.update(self._done)
         self._done.clear()
         self._note_claimed(results)
@@ -569,13 +507,15 @@ class OverlayServer:
         s = dict(self.bank.stats())
         s.update({"rounds": self.n_rounds, "requests": self.n_requests,
                   "pending": self.pending, "inflight": len(self._inflight),
-                  "tenants": len(self._flows)})
+                  "queued": self.queued, "queued_tiles": self.queued_tiles,
+                  "tenants": len(self._flows),
+                  "round_policy": type(self.round_policy).__name__})
         return s
 
 
 # ==================================================== sharded serving layer
 class ShardedOverlayServer:
-    """Residency-routed serving over N per-replica context banks.
+    """Policy-routed serving over N per-replica context banks.
 
     The paper keeps ONE time-multiplexed FU pipeline hot by making a
     kernel switch an index; the single-bank ``OverlayServer`` scales that
@@ -585,30 +525,27 @@ class ShardedOverlayServer:
     replication), so aggregate residency grows with the fleet while each
     replica's instruction store stays small.
 
-    * ROUTING — every request is keyed by context content and looked up in
-      a shared :class:`~repro.core.bank.BankDirectory`.  A fresh entry
-      (validated against the owning bank's residency generation) routes
-      the request to the replica already holding its context — a residency
-      HIT.  A miss (or a stale entry — the context was evicted since it
-      was published) falls back to the least-loaded replica (by pending
-      tiles), prefetches the context there, and publishes the new
-      residency.
-    * MIGRATION — when the owning replica is hot (its pending tiles exceed
-      ``migrate_factor`` x the coolest replica's, by at least
-      ``migrate_min_tiles``), the context is re-homed: prefetched on the
-      cool replica, republished, and new traffic follows it.  The old copy
-      ages out of the hot bank via LRU; in-flight rounds there are
-      untouched (pins).  A per-key cooldown (``migrate_cooldown`` submits)
-      stops a single globally-hot key from thrashing between replicas.
+    * ROUTING + REBALANCING are delegated to a
+      :class:`~repro.sched.routing.RouterPolicy`.  The default
+      :class:`~repro.sched.routing.ResidencyRouter` keys every request by
+      context content, routes residency hits to the owning replica
+      (directory entries validated by residency generation), falls back
+      least-loaded on miss/stale, and migrates hot contexts with
+      hysteresis + cooldown.  ``steal=True`` swaps in the
+      :class:`~repro.sched.routing.WorkStealingRouter`: at drain time an
+      idle replica pulls whole queued kernel-groups from the
+      most-backlogged replica (context prefetched on the thief first,
+      directory republished, in-flight rounds never touched).
     * ADMISSION — token buckets live HERE, spanning replicas, so a
       tenant's rate cannot be dodged by its kernels landing on different
-      replicas.  Per-replica DRR fairness is unchanged underneath.
+      replicas.  Per-replica round-policy fairness is unchanged
+      underneath.
     * DELIVERY — tickets are global; ``flush``/``as_completed``/``result``
       merge the per-replica pipelines.  The drain interleaves round
       launches across replicas before blocking on any of them, so
       per-device rounds execute concurrently (JAX async dispatch).
       ``flush_sync`` drains replica-by-replica with the barrier loop — the
-      oracle path.
+      oracle path (no pipelining, no stealing).
 
     Every replica is a full ``OverlayServer`` pinned to one device of
     ``launch.mesh.make_serving_mesh`` (devices wrap when the fleet is
@@ -621,97 +558,105 @@ class ShardedOverlayServer:
                  dtype=jnp.float32, max_outputs: int = 8,
                  max_inflight: int = 2, round_kernels: int | None = None,
                  quantum_tiles: float | None = None,
+                 round_policy=None, router=None, steal: bool = False,
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
                  clock=time.monotonic, metrics_window: int = 65536,
                  devices=None, migrate_factor: float = 4.0,
-                 migrate_min_tiles: int = 16, migrate_cooldown: int = 32):
-        from repro.core.bank import BankDirectory
+                 migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
+                 steal_min_tiles: int = 4):
         from repro.launch.mesh import make_serving_mesh
         self.devices = make_serving_mesh(n_replicas, devices)
         self.n_replicas = len(self.devices)
         self.tile = tile
+        # each replica builds its OWN round policy (policies may carry
+        # feedback state, e.g. DynamicTilePolicy's adapted budget): a
+        # string/None resolves per replica, a zero-arg factory is invoked
+        # per replica.  Passing one policy INSTANCE shares it across
+        # replicas — fine for stateless pacing, use a factory otherwise.
+        def _policy_for_replica():
+            return round_policy() if callable(round_policy) else round_policy
         # replicas do NOT get admission policies: admission is global
         self.replicas = [
             OverlayServer(bank_capacity=bank_capacity, tile=tile,
                           backend=backend, s_max=s_max, dtype=dtype,
                           max_outputs=max_outputs, max_inflight=max_inflight,
                           round_kernels=round_kernels,
-                          quantum_tiles=quantum_tiles, clock=clock,
+                          quantum_tiles=quantum_tiles,
+                          round_policy=_policy_for_replica(), clock=clock,
                           metrics_window=metrics_window, device=d)
             for d in self.devices]
-        self.directory = BankDirectory()
+        #: the routing policy (see repro.sched.routing); ``steal=True``
+        #: without an explicit router builds a WorkStealingRouter
+        self.router = router if router is not None else make_router(
+            steal=steal, migrate_factor=migrate_factor,
+            migrate_min_tiles=migrate_min_tiles,
+            migrate_cooldown=migrate_cooldown,
+            steal_min_tiles=steal_min_tiles)
         self.admission = AdmissionControl(admission, default_admission,
                                           clock=clock)
         self.clock = clock
-        if migrate_factor < 1:
-            raise ValueError(
-                f"migrate_factor must be >= 1, got {migrate_factor}")
-        self.migrate_factor = migrate_factor
-        self.migrate_min_tiles = migrate_min_tiles
-        self.migrate_cooldown = migrate_cooldown
         self.metrics_window = metrics_window
         self._owner: dict[int, tuple[int, int]] = {}   # global -> (rep, loc)
         self._global: list[dict[int, int]] = [
             {} for _ in range(self.n_replicas)]        # rep: loc -> global
         self._claimed: deque[int] = deque()
-        self._migrated_at: dict[tuple, int] = {}
         self._next_ticket = 0
         self._rr = 0                                   # retire fan-in ptr
         self.n_submits = 0
-        self.n_route_hits = 0
-        self.n_route_misses = 0
-        self.n_migrations = 0
 
     @property
     def banks(self):
         """Per-replica ContextBanks, replica order."""
         return [rep.bank for rep in self.replicas]
 
-    # ----------------------------------------------------------------- route
-    def _route(self, kernel) -> int:
-        """Pick the serving replica for one request (see class docstring)."""
-        from repro.core.bank import BankError, context_key
-        loads = [rep.pending_tiles for rep in self.replicas]
-        coolest = min(range(self.n_replicas), key=loads.__getitem__)
-        owner = self.directory.locate(kernel, self.banks)
-        if owner is not None:
-            hot = (owner != coolest
-                   and loads[owner] - loads[coolest] >= self.migrate_min_tiles
-                   and loads[owner] >= self.migrate_factor
-                   * max(loads[coolest], 1))
-            key = context_key(kernel.program)
-            last = self._migrated_at.get(key)
-            cooled = (last is None
-                      or self.n_submits - last >= self.migrate_cooldown)
-            if not (hot and cooled):
-                self.n_route_hits += 1
-                return owner
-            target = coolest
-            self._migrated_at[key] = self.n_submits
-            self.n_migrations += 1
-        else:
-            self.n_route_misses += 1
-            target = coolest
-        # warm the context on its new home and publish the residency; a
-        # momentarily all-pinned bank defers the load to the replica's own
-        # round plan (which retires rounds until it fits)
-        try:
-            self.replicas[target].bank.prefetch([kernel])
-            self.directory.publish_current(kernel, target,
-                                           self.replicas[target].bank)
-        except BankError:
-            self.directory.drop(kernel)
-        return target
+    # --------------------------------------------- router-facing delegation
+    @property
+    def directory(self):
+        """The router's shared BankDirectory (residency cache)."""
+        return self.router.directory
+
+    @property
+    def n_route_hits(self) -> int:
+        return self.router.n_hits
+
+    @property
+    def n_route_misses(self) -> int:
+        return self.router.n_misses
+
+    @property
+    def n_migrations(self) -> int:
+        return self.router.n_migrations
+
+    @property
+    def n_steals(self) -> int:
+        return getattr(self.router, "n_steals", 0)
+
+    @property
+    def residency_hit_rate(self) -> float:
+        """Routed-to-resident-replica fraction (stale hits count as
+        misses); NaN before any routing decision."""
+        return self.router.hit_rate
+
+    def adopt_stolen(self, victim: int, thief: int, stolen) -> None:
+        """Re-home stolen queued requests' global tickets — the router's
+        bookkeeping hook after ``replicas[victim].steal_queued``.  Each
+        request gets a fresh local ticket on the thief; its global ticket
+        (what the client holds) follows it."""
+        for req, rec in stolen:
+            g = self._global[victim].pop(req.ticket)
+            loc = self.replicas[thief].adopt_queued(req, rec)
+            self._owner[g] = (thief, loc)
+            self._global[thief][loc] = g
 
     # ----------------------------------------------------------------- queue
     def submit(self, kernel, xs, tenant: str = DEFAULT_TENANT) -> int:
-        """Admit globally, route by residency, enqueue on one replica;
-        returns a global ticket."""
+        """Admit globally, route via the router policy, enqueue on one
+        replica; returns a global ticket."""
         xs = list(xs)
         cost = max(1, -(-int(np.shape(xs[0])[0]) // self.tile))
         self.admission.admit(tenant, cost)
-        rep = self._route(kernel)
+        rep = self.router.route(kernel, self)
         loc = self.replicas[rep].submit(kernel, xs, tenant=tenant)
         t = self._next_ticket
         self._next_ticket += 1
@@ -723,13 +668,6 @@ class ShardedOverlayServer:
     @property
     def pending(self) -> int:
         return sum(rep.pending for rep in self.replicas)
-
-    @property
-    def residency_hit_rate(self) -> float:
-        """Routed-to-resident-replica fraction (stale hits count as
-        misses); NaN before any routing decision."""
-        n = self.n_route_hits + self.n_route_misses
-        return self.n_route_hits / n if n else float("nan")
 
     # -------------------------------------------------------------- retrieve
     def _to_global(self, rep: int, local_results: dict) -> dict:
@@ -744,6 +682,17 @@ class ShardedOverlayServer:
             if rep_loc is not None:
                 self._global[rep_loc[0]].pop(rep_loc[1], None)
 
+    def try_result(self, ticket: int):
+        """Non-blocking claim across the fleet (see
+        ``OverlayServer.try_result``)."""
+        if ticket not in self._owner:
+            raise KeyError(f"unknown ticket {ticket}")
+        rep, loc = self._owner[ticket]
+        out = self.replicas[rep].try_result(loc)
+        if out is not None:
+            self._note_claimed([ticket])
+        return out
+
     def result(self, ticket: int):
         """Block until the ticket's outputs are ready (drives only the
         owning replica's pipeline); one claim per ticket."""
@@ -756,7 +705,8 @@ class ShardedOverlayServer:
 
     def as_completed(self):
         """Yield ``(ticket, outputs)`` in completion order across ALL
-        replicas; keeps every replica's pipeline full while iterating and
+        replicas; keeps every replica's pipeline full while iterating
+        (rebalancing queued work first when the router steals) and
         retires rounds fan-in round-robin so no replica's results are
         held back behind another's backlog."""
         while True:
@@ -771,6 +721,7 @@ class ShardedOverlayServer:
                     yield t, outs
             if yielded:
                 continue
+            self.router.rebalance(self)
             for rep in self.replicas:
                 rep._fill_pipeline()
             live = [rep for rep in self.replicas if rep._inflight]
@@ -779,14 +730,31 @@ class ShardedOverlayServer:
             live[self._rr % len(live)]._retire_oldest()
             self._rr += 1
 
+    def pump_once(self) -> bool:
+        """One unit of fleet drain work for ``sched.pump.AutoPump``:
+        rebalance queued work (stealing routers), top up every replica's
+        pipeline, deliver one round (fan-in round-robin)."""
+        self.router.rebalance(self)
+        for rep in self.replicas:
+            rep._fill_pipeline()
+        live = [rep for rep in self.replicas if rep._inflight]
+        if not live:
+            return False
+        live[self._rr % len(live)]._retire_oldest()
+        self._rr += 1
+        return True
+
     def flush(self) -> dict[int, list]:
         """Serve everything queued on every replica; {ticket: outputs}.
 
         Launches rounds on ALL replicas before blocking on any one of
         them, so the per-device rounds execute concurrently; within each
-        replica the usual round pipelining applies.
+        replica the usual round pipelining applies.  A stealing router
+        rebalances queued work each pass, so an idle replica picks up a
+        backlogged replica's queue instead of going dark.
         """
         while True:
+            self.router.rebalance(self)
             for rep in self.replicas:
                 rep._fill_pipeline()
             live = [rep for rep in self.replicas if rep._inflight]
@@ -802,7 +770,8 @@ class ShardedOverlayServer:
 
     def flush_sync(self) -> dict[int, list]:
         """Barrier drain, replica by replica — the sharded oracle path
-        (no cross-replica overlap, no intra-replica pipelining)."""
+        (no cross-replica overlap, no intra-replica pipelining, no
+        stealing)."""
         results: dict[int, list] = {}
         for rep_id, rep in enumerate(self.replicas):
             results.update(self._to_global(rep_id, rep.flush_sync()))
@@ -847,23 +816,20 @@ class ShardedOverlayServer:
             rep_loc = self._owner.pop(t, None)
             if rep_loc is not None:
                 self._global[rep_loc[0]].pop(rep_loc[1], None)
-        self.n_route_hits = self.n_route_misses = self.n_migrations = 0
-        d = self.directory
-        d.n_fresh = d.n_stale = d.n_unknown = 0
+        self.router.reset_metrics()
 
     def stats(self) -> dict:
         per = [rep.stats() for rep in self.replicas]
-        return {"replicas": self.n_replicas,
-                "pending": self.pending,
-                "route_hits": self.n_route_hits,
-                "route_misses": self.n_route_misses,
-                "residency_hit_rate": self.residency_hit_rate,
-                "migrations": self.n_migrations,
-                "directory": self.directory.stats(),
-                "per_replica": per,
-                "rounds": sum(p["rounds"] for p in per),
-                "requests": sum(p["requests"] for p in per),
-                "evictions": sum(p["evictions"] for p in per)}
+        s = {"replicas": self.n_replicas,
+             "pending": self.pending,
+             "queue_depth": [p["queued"] for p in per],
+             "queued_tiles": [p["queued_tiles"] for p in per],
+             "per_replica": per,
+             "rounds": sum(p["rounds"] for p in per),
+             "requests": sum(p["requests"] for p in per),
+             "evictions": sum(p["evictions"] for p in per)}
+        s.update(self.router.stats())
+        return s
 
 
 def overlay_demo(argv_ns) -> int:
@@ -871,7 +837,8 @@ def overlay_demo(argv_ns) -> int:
 
     Default mode drains with the pipelined ``flush``; ``--stream`` submits
     per-tenant and consumes ``as_completed`` to show completion-order
-    delivery plus per-tenant latency percentiles.
+    delivery plus per-tenant latency percentiles.  ``--policy`` swaps the
+    round-formation policy (see repro.sched.rounds).
     """
     from repro.core.overlay import compile_program
     from repro.core.paper_bench import BENCH_NAMES, benchmark
@@ -881,7 +848,8 @@ def overlay_demo(argv_ns) -> int:
     kernels = {n: compile_program(benchmark(n)) for n in names}
     srv = OverlayServer(bank_capacity=argv_ns.bank, tile=argv_ns.tile,
                         backend=argv_ns.backend,
-                        round_kernels=max(1, argv_ns.bank // 2))
+                        round_kernels=max(1, argv_ns.bank // 2),
+                        round_policy=argv_ns.policy)
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(argv_ns.requests):
@@ -915,7 +883,8 @@ def overlay_demo(argv_ns) -> int:
            for k_, v in srv.latency_percentiles().items()}
     mode = "as_completed stream" if argv_ns.stream else "pipelined flush"
     print(f"served {len(reqs)} mixed requests over {len(names)} kernels "
-          f"x {argv_ns.tenants} tenants (bank={argv_ns.bank}, {mode}) "
+          f"x {argv_ns.tenants} tenants (bank={argv_ns.bank}, {mode}, "
+          f"policy={st['round_policy']}) "
           f"in {dt * 1e3:.1f} ms = {len(reqs) / dt:,.0f} req/s")
     print(f"delivery latency percentiles: {pct}")
     print(f"server stats: {st}")
@@ -923,6 +892,7 @@ def overlay_demo(argv_ns) -> int:
 
 
 def main(argv=None):
+    from repro.sched.rounds import ROUND_POLICIES
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--overlay-demo", action="store_true",
@@ -931,6 +901,10 @@ def main(argv=None):
                     help="context-bank capacity for --overlay-demo")
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--policy", default=None,
+                    choices=sorted(ROUND_POLICIES),
+                    help="round-formation policy for --overlay-demo "
+                         "(default: REPRO_ROUND_POLICY env or drr)")
     ap.add_argument("--requests", type=int, default=36)
     ap.add_argument("--req-batch", type=int, default=256)
     ap.add_argument("--tenants", type=int, default=3,

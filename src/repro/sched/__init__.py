@@ -1,0 +1,39 @@
+"""Pluggable scheduling subsystem for the overlay serving engines.
+
+The paper's core trade is time-multiplexing one FU array across kernels
+via cheap context switches; the serving engines make the analogous trade
+in software.  This package separates every scheduling DECISION from the
+engine MECHANICS (``launch.serve`` keeps the staged pipeline, pinning,
+ticket bookkeeping), the way JIT-assembly overlays separate the compute
+fabric from placement policy:
+
+* :mod:`repro.sched.admission` — per-tenant token-bucket admission
+  (``TokenBucket``, ``AdmissionControl``, ``AdmissionError``);
+* :mod:`repro.sched.rounds` — round formation (``RoundPolicy`` protocol:
+  ``DeficitRoundRobin``, ``CoalescingPolicy``, ``DynamicTilePolicy``);
+* :mod:`repro.sched.routing` — replica selection for the sharded fleet
+  (``RouterPolicy`` protocol: ``ResidencyRouter``, ``WorkStealingRouter``);
+* :mod:`repro.sched.pump` — ``AutoPump``, a background drain thread so
+  concurrent ``submit`` makes progress without an explicit ``flush``.
+
+See docs/SCHEDULING.md for the policy-author guide.
+"""
+
+from repro.sched.admission import (AdmissionControl, AdmissionError,
+                                   TokenBucket)
+from repro.sched.pump import AutoPump
+from repro.sched.rounds import (ROUND_POLICIES, CoalescingPolicy,
+                                DeficitRoundRobin, DynamicTilePolicy, Flow,
+                                OverlayRequest, RoundPolicy,
+                                make_round_policy)
+from repro.sched.routing import (ResidencyRouter, RouterPolicy,
+                                 WorkStealingRouter, make_router)
+
+__all__ = [
+    "AdmissionControl", "AdmissionError", "TokenBucket",
+    "AutoPump",
+    "ROUND_POLICIES", "RoundPolicy", "DeficitRoundRobin",
+    "CoalescingPolicy", "DynamicTilePolicy", "Flow", "OverlayRequest",
+    "make_round_policy",
+    "RouterPolicy", "ResidencyRouter", "WorkStealingRouter", "make_router",
+]

@@ -185,9 +185,12 @@ def test_hot_tenant_cannot_starve_cold_tenant(kernels):
 
 def test_quantum_bounds_hot_tenant_per_round(kernels):
     """With a finite DRR quantum, a hot tenant's backlog on ONE kernel is
-    spread across rounds instead of monopolising each round."""
+    spread across rounds instead of monopolising each round.  Pinned to
+    the DRR policy: this is a DRR-semantics test (coalescing/dynamic
+    policies deliberately pace differently; see test_sched_policies)."""
     k = kernels["chebyshev"]
-    srv = OverlayServer(bank_capacity=4, quantum_tiles=2)
+    srv = OverlayServer(bank_capacity=4, quantum_tiles=2,
+                        round_policy="drr")
     hot = [srv.submit(k, _xs(k, 128, i), tenant="hot") for i in range(8)]
     srv.flush()
     rounds = sorted(srv.record(t)["round"] for t in hot)

@@ -1,9 +1,13 @@
-"""Docs checker: validate markdown links and code references.
+"""Docs checker: validate markdown links, anchors, and code references.
 
 Checks every tracked ``*.md`` file:
 
 * relative links (``[text](path)`` and ``[text](path#anchor)``) must point
   at files that exist (http/https/mailto links are skipped);
+* anchor fragments (``path#anchor`` and same-page ``#anchor``) must match
+  a heading in the target file (GitHub slugification: lowercase, drop
+  punctuation, spaces to hyphens) — a renamed section breaks its inbound
+  links silently otherwise;
 * backtick references to repo paths like ``src/repro/core/bank.py`` or
   ``benchmarks/multi_tenant.py`` must exist.
 
@@ -20,9 +24,40 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 CODE_PATH_RE = re.compile(
     r"`((?:src|docs|tests|benchmarks|examples|tools)/[\w./-]+\.\w+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
 
 
-def check_file(md: pathlib.Path) -> list[str]:
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a markdown heading (close enough for our
+    ASCII headings): drop markup/punctuation, lowercase, hyphenate."""
+    text = heading.strip().replace("`", "")
+    text = re.sub(r"[^\w\s-]", "", text).strip().lower()
+    return re.sub(r"[\s]+", "-", text)
+
+
+def heading_slugs(md: pathlib.Path, cache: dict) -> set[str]:
+    slugs = cache.get(md)
+    if slugs is None:
+        slugs = set()
+        in_fence = False
+        for line in md.read_text(encoding="utf-8").splitlines():
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            m = None if in_fence else HEADING_RE.match(line)
+            if m:
+                base = github_slug(m.group(1))
+                # GitHub dedupes repeats as slug-1, slug-2, ...
+                slug, n = base, 1
+                while slug in slugs:
+                    slug = f"{base}-{n}"
+                    n += 1
+                slugs.add(slug)
+        cache[md] = slugs
+    return slugs
+
+
+def check_file(md: pathlib.Path, slug_cache: dict) -> list[str]:
     errors = []
     text = md.read_text(encoding="utf-8")
     in_fence = False
@@ -33,12 +68,18 @@ def check_file(md: pathlib.Path) -> list[str]:
         if in_fence:
             continue
         for target in LINK_RE.findall(line):
-            if target.startswith(("http://", "https://", "mailto:", "#")):
+            if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            path = target.split("#", 1)[0]
-            if not (md.parent / path).exists():
+            path, _, anchor = target.partition("#")
+            dest = md if not path else (md.parent / path).resolve()
+            if not dest.exists():
                 errors.append(f"{md.relative_to(ROOT)}:{ln}: "
                               f"broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in heading_slugs(dest, slug_cache):
+                    errors.append(f"{md.relative_to(ROOT)}:{ln}: "
+                                  f"broken anchor -> {target}")
         for ref in CODE_PATH_RE.findall(line):
             if not (ROOT / ref).exists():
                 errors.append(f"{md.relative_to(ROOT)}:{ln}: "
@@ -50,8 +91,9 @@ def main() -> int:
     mds = [p for p in ROOT.rglob("*.md")
            if "__pycache__" not in p.parts and ".git" not in p.parts]
     errors = []
+    slug_cache: dict = {}
     for md in sorted(mds):
-        errors.extend(check_file(md))
+        errors.extend(check_file(md, slug_cache))
     for e in errors:
         print(e)
     print(f"checked {len(mds)} markdown files: "

@@ -1,0 +1,102 @@
+"""Record the DRR golden trace: round composition + result digests.
+
+Replays a fixed multi-tenant submission trace through ``OverlayServer``
+and writes ``tests/golden/drr_rounds.json``:
+
+* ``rounds`` — the exact ticket composition of every DRR round, in
+  formation order (intra-round order is the policy's take order);
+* ``digests`` — sha1 of each ticket's concatenated f32 output bytes.
+
+The file is the bit-for-bit extraction oracle for
+``repro.sched.rounds.DeficitRoundRobin`` (tests/test_sched_policies.py):
+the policy-driven engine must form IDENTICAL rounds and serve IDENTICAL
+bytes on this trace.  Regenerate only when the trace itself is changed
+deliberately — never to paper over a behavioural drift::
+
+    PYTHONPATH=src python tools/record_golden_rounds.py
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "tests" / "golden" / "drr_rounds.json"
+
+#: trace shape — mirrored in tests/test_sched_policies.py
+TRACE_SEED = 1234
+TRACE_REQUESTS = 28
+TRACE_TENANTS = 4
+TRACE_BATCHES = (48, 96, 160, 256)
+SERVER_KW = dict(bank_capacity=4, round_kernels=2, max_inflight=2,
+                 quantum_tiles=2.0, tile=64)
+
+
+def build_trace(kernels):
+    """Deterministic (tenant, kernel, xs) list — the recorded submissions."""
+    rng = np.random.RandomState(TRACE_SEED)
+    names = sorted(kernels)
+    trace = []
+    for i in range(TRACE_REQUESTS):
+        name = names[int(rng.randint(len(names)))]
+        k = kernels[name]
+        batch = int(TRACE_BATCHES[int(rng.randint(len(TRACE_BATCHES)))])
+        xs = [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+              for _ in k.dfg.inputs]
+        trace.append((f"tenant{i % TRACE_TENANTS}", name, xs))
+    return trace
+
+
+def replay(srv, trace, kernels):
+    """Submit the trace, spy on round formation, drain; returns
+    (rounds-as-ticket-lists, {ticket: sha1-of-output-bytes})."""
+    rounds: list[list[int]] = []
+    orig = srv._form_round
+
+    def spy():
+        reqs = orig()
+        if reqs is not None:
+            rounds.append([r.ticket for r in reqs])
+        return reqs
+
+    srv._form_round = spy
+    for tenant, name, xs in trace:
+        srv.submit(kernels[name], xs, tenant=tenant)
+    results = srv.flush()
+    digests = {}
+    for t, outs in results.items():
+        h = hashlib.sha1()
+        for y in outs:
+            h.update(np.ascontiguousarray(np.asarray(y, np.float32)).tobytes())
+        digests[int(t)] = h.hexdigest()
+    return rounds, digests
+
+
+def main() -> int:
+    from repro.core.overlay import compile_program
+    from repro.core.paper_bench import BENCH_NAMES, benchmark
+    from repro.launch.serve import OverlayServer
+
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    trace = build_trace(kernels)
+    srv = OverlayServer(**SERVER_KW)
+    rounds, digests = replay(srv, trace, kernels)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(
+        {"seed": TRACE_SEED, "requests": TRACE_REQUESTS,
+         "tenants": TRACE_TENANTS, "batches": list(TRACE_BATCHES),
+         "server": {k: v for k, v in SERVER_KW.items()},
+         "rounds": rounds,
+         "digests": {str(t): d for t, d in sorted(digests.items())}},
+        indent=1) + "\n")
+    print(f"wrote {OUT}: {len(rounds)} rounds, {len(digests)} tickets")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
