@@ -35,6 +35,17 @@ must win on throughput (asserted, ``--tolerance`` slack) and every
 stolen result must stay bit-identical to the single-bank oracle
 (asserted).  Per-replica scheduling stats are printed for both arms.
 
+``--autoscale`` runs the ELASTIC-FLEET study instead: a bursty arrival
+trace (burst slices of offered load separated by idle lulls) served by
+an autoscaled fleet (``PressureAutoscaler``: starts at 1 replica, grows
+under queue pressure, drains idle replicas during lulls) vs a STATIC
+fleet provisioned for peak (``--max-replicas`` everywhere, all slices).
+The study prints the replica-count timeline, asserts the elastic fleet
+uses STRICTLY fewer replica-slices (the paper's don't-provision-for-peak
+argument at fleet level), asserts throughput within ``--tolerance`` of
+static, and checks every elastic result bit-for-bit against the
+single-bank oracle while the fleet resizes under the traffic.
+
 ``--policy {drr,coalesce,dynamic}`` swaps the round-formation policy
 (``repro.sched.rounds``) under the serving studies.
 
@@ -43,8 +54,11 @@ Run: PYTHONPATH=src python -m benchmarks.multi_tenant [--percentiles]
          --json artifacts/bench/sharded.json
      JAX_DEVICES=2 PYTHONPATH=src python -m benchmarks.multi_tenant \
          --steal --replicas 4 --json artifacts/bench/steal.json
-Reading the output: docs/SERVING.md#reading-the-benchmark and
-docs/SCHEDULING.md#the-stealing-study.
+     JAX_DEVICES=2 PYTHONPATH=src python -m benchmarks.multi_tenant \
+         --autoscale --max-replicas 4 --json artifacts/bench/autoscale.json
+Reading the output: docs/SERVING.md#reading-the-benchmark,
+docs/SCHEDULING.md#the-stealing-study, and
+docs/SCHEDULING.md#the-autoscaling-study.
 """
 
 import argparse
@@ -516,6 +530,218 @@ def bench_stealing(kernels, replicas, n_requests=240, backend="jnp",
     }
 
 
+# ------------------------------------------------------ autoscaling study
+#: the bursty trace: 1.0 = a burst slice (offered load), 0.0 = an idle
+#: lull.  Bursts come in runs so pressure sustains across drain passes;
+#: lulls come in runs so idle streaks can ripen into scale-downs.
+AUTOSCALE_PATTERN = (1.0, 1.0, 1.0, 0.0, 0.0, 0.0,
+                     1.0, 1.0, 0.0, 0.0, 1.0, 0.0)
+#: idle autoscaler observations per lull slice (what a background pump's
+#: poll ticks would deliver); a lull RUN must outlast AUTOSCALE_DOWN_ROUNDS
+#: for scale-downs to ripen where they should — in the lulls, not inside
+#: a burst's drain
+AUTOSCALE_LULL_TICKS = 16
+#: idle observations before a replica drains: larger than any burst
+#: drain's trailing idle passes, smaller than one lull run's ticks
+AUTOSCALE_DOWN_ROUNDS = 12
+#: timed repetitions of the full trace per arm (best-of comparison)
+AUTOSCALE_REPS = 3
+
+
+def _bursty_trace(kernels, n_requests, seed=0):
+    """Per-slice workloads for AUTOSCALE_PATTERN: zipf bursts and empty
+    lulls — the load shape peak provisioning wastes replicas on."""
+    n_bursts = sum(1 for p in AUTOSCALE_PATTERN if p > 0)
+    per_burst = max(1, n_requests // n_bursts)
+    slices, burst_i = [], 0
+    for p in AUTOSCALE_PATTERN:
+        if p > 0:
+            slices.append(_zipf_workload(kernels, per_burst,
+                                         seed=seed + 7 * burst_i))
+            burst_i += 1
+        else:
+            slices.append([])
+    return slices
+
+
+def _serve_trace(srv, slices, timeline=None):
+    """Serve one pass of the bursty trace; returns {ticket: outputs}.
+
+    A burst slice models ARRIVAL OVER TIME, not one atomic batch: the
+    slice's requests land in chunks with pump ticks between them (the
+    drain edge a background ``AutoPump`` would drive), then the tail is
+    flushed.  This matters for the elastic arm — a whole-burst ``flush``
+    collapses into ~4 giant pipeline passes, starving the autoscaler of
+    observations before the backlog is gone — and is identical work for
+    the static arm.  Lull slices tick ``pump_once`` so an autoscaler
+    sees the idleness.  ``timeline`` collects each slice's PEAK replica
+    count — the capacity the slice actually consumed (conservative for
+    the elastic arm: a replica alive for any part of a slice is charged
+    for the whole slice)."""
+    results = {}
+    for sl in slices:
+        srv.peak_replicas = srv.n_replicas     # per-slice high-water mark
+        if sl:
+            chunk = max(1, len(sl) // 6)
+            for i in range(0, len(sl), chunk):
+                for tenant, k, xs in sl[i:i + chunk]:
+                    srv.submit(k, xs, tenant=tenant)
+                srv.pump_once()
+            results.update(srv.flush())
+        else:
+            for _ in range(AUTOSCALE_LULL_TICKS):
+                srv.pump_once()
+        if timeline is not None:
+            timeline.append(srv.peak_replicas)
+    return results
+
+
+def bench_autoscale(kernels, max_replicas, n_requests=240, backend="jnp",
+                    policy=None):
+    """Paired elastic-vs-static study over one bursty trace.
+
+    Both arms use the stealing router (a grown replica must be able to
+    PULL queued work, not just catch new submits).  The elastic arm
+    starts at one replica with a trigger-happy ``PressureAutoscaler``;
+    the static arm holds ``max_replicas`` through every slice — the
+    peak-provisioned baseline.  Bit parity vs the single-bank oracle is
+    asserted on a full trace pass WHILE the fleet resizes.
+    """
+    from repro.sched import PressureAutoscaler
+
+    slices = _bursty_trace(kernels, n_requests)
+
+    def build(elastic):
+        auto = PressureAutoscaler(
+            up_tiles=8.0, up_rounds=2, down_rounds=AUTOSCALE_DOWN_ROUNDS,
+            cooldown_s=0.0, min_replicas=1,
+            max_replicas=max_replicas) if elastic else None
+        return ShardedOverlayServer(
+            n_replicas=1 if elastic else max_replicas,
+            bank_capacity=SHARD_BANK_CAPACITY, round_kernels=2,
+            max_inflight=2, quantum_tiles=4.0, backend=backend,
+            round_policy=policy, steal=True, migrate_min_tiles=10 ** 9,
+            autoscaler=auto)
+
+    srv_el, srv_st = build(True), build(False)
+    # parity pass (doubles as compile warmup): the elastic arm serves the
+    # whole trace, scaling as it goes, against the single-bank oracle
+    oracle = OverlayServer(bank_capacity=max(16, len(kernels)))
+    pairs = []
+    for sl in slices:
+        for t, k, xs in sl:
+            pairs.append((srv_el.submit(k, xs, tenant=t),
+                          oracle.submit(k, xs, tenant=t)))
+    got, want = srv_el.flush(), oracle.flush_sync()
+    for gt, ot in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+    warmup_ups = srv_el.n_scale_ups
+    _serve_trace(srv_st, slices)              # static-arm warmup
+    srv_el.reset_metrics()
+    srv_st.reset_metrics()
+    walls = {"elastic": [], "static": []}
+    timelines: dict = {"elastic": [], "static": []}
+    slice_counts = {"elastic": 0, "static": 0}
+    for rep in range(AUTOSCALE_REPS):
+        for srv, mode in ((srv_st, "static"), (srv_el, "elastic")):
+            tl: list = []
+            t0 = time.perf_counter()
+            results = _serve_trace(srv, slices, timeline=tl)
+            _block(list(results.values()))
+            walls[mode].append(time.perf_counter() - t0)
+            timelines[mode] = tl              # keep the LAST rep's timeline
+    # replica-slices: integral of fleet size over the trace — what a
+    # peak-provisioned fleet burns replicas on during every lull
+    for mode in walls:
+        slice_counts[mode] = sum(timelines[mode])
+    best = {m: min(w) for m, w in walls.items()}
+    n_reqs = sum(len(s) for s in slices)
+    return {
+        "max_replicas": max_replicas,
+        "devices": jax.device_count(),
+        "requests_per_trace": n_reqs,
+        "slices": len(slices),
+        "elastic_rps": n_reqs / best["elastic"],
+        "static_rps": n_reqs / best["static"],
+        "throughput_ratio": best["static"] / best["elastic"],
+        "replica_timeline_elastic": timelines["elastic"],
+        "replica_timeline_static": timelines["static"],
+        "replica_slices_elastic": slice_counts["elastic"],
+        "replica_slices_static": slice_counts["static"],
+        "idle_replica_slices_saved": (slice_counts["static"]
+                                      - slice_counts["elastic"]),
+        "scale_ups": warmup_ups + srv_el.n_scale_ups,
+        "scale_ups_timed": srv_el.n_scale_ups,
+        "scale_downs_timed": srv_el.n_scale_downs,
+        "evacuated_tiles": srv_el.n_evacuated_tiles,
+        "evacuated_requests": srv_el.n_evacuated_requests,
+        "replicas_retired": srv_el.n_replicas_retired,
+        "stats_elastic": srv_el.stats(),
+        "stats_static": srv_st.stats(),
+    }
+
+
+def autoscale_main(max_replicas, n_requests=240, backend="jnp",
+                   tolerance=1.0, json_path=None, policy=None):
+    """Autoscaling study; asserts the elastic fleet used STRICTLY fewer
+    replica-slices than the static fleet, actually scaled both ways,
+    kept throughput within ``tolerance`` of static, and (inside
+    ``bench_autoscale``) stayed bit-identical to the single-bank oracle
+    while resizing."""
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    row = bench_autoscale(kernels, max_replicas, n_requests, backend,
+                          policy)
+    print("max_replicas,devices,elastic_rps,static_rps,throughput_ratio,"
+          "replica_slices_elastic,replica_slices_static,scale_ups,"
+          "scale_downs,evacuated_tiles")
+    print(f"{row['max_replicas']},{row['devices']},"
+          f"{row['elastic_rps']:.1f},{row['static_rps']:.1f},"
+          f"{row['throughput_ratio']:.2f},"
+          f"{row['replica_slices_elastic']},"
+          f"{row['replica_slices_static']},{row['scale_ups']},"
+          f"{row['scale_downs_timed']},{row['evacuated_tiles']}")
+    print(f"# replica-count timeline (elastic): "
+          f"{row['replica_timeline_elastic']} vs static "
+          f"{row['replica_timeline_static']}")
+    print(f"# elastic fleet used {row['replica_slices_elastic']} "
+          f"replica-slices vs {row['replica_slices_static']} static — "
+          f"{row['idle_replica_slices_saved']} idle replica-slices saved "
+          f"({row['idle_replica_slices_saved'] / max(1, row['replica_slices_static']):.0%} "
+          f"of the peak-provisioned budget) at "
+          f"{row['throughput_ratio']:.2f}x static wall-clock; results "
+          f"bit-identical to the single-bank oracle while scaling")
+    _print_fleet_stats("elastic arm", row["stats_elastic"])
+    _print_fleet_stats("static arm", row["stats_static"])
+    st = row["stats_elastic"]
+    print(f"# elastic telemetry: scale_ups={st['scale_ups']} "
+          f"scale_downs={st['scale_downs']} "
+          f"evacuated_tiles={st['evacuated_tiles']} "
+          f"replicas_retired={st['replicas_retired']} "
+          f"retired_lifetime_s={st['retired_lifetime_s']:.3f}")
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        slim = {k: v for k, v in row.items()
+                if k not in ("stats_elastic", "stats_static")}
+        with open(json_path, "w") as f:
+            json.dump(slim, f, indent=1)
+        print(f"# wrote {json_path}")
+    # TIMED counters: growth during the untimed warmup/parity pass must
+    # not satisfy the claim that the autoscaler tracks the bursty trace
+    assert row["scale_ups_timed"] >= 1, (
+        "autoscaler never grew the fleet during the timed trace", row)
+    assert row["scale_downs_timed"] >= 1, (
+        "autoscaler never drained an idle replica", row)
+    assert (row["replica_slices_elastic"]
+            < row["replica_slices_static"]), (
+        "elastic fleet did not save replica-slices vs peak provisioning",
+        row["replica_slices_elastic"], row["replica_slices_static"])
+    assert row["elastic_rps"] >= row["static_rps"] * tolerance, (
+        "elastic fleet fell outside the throughput tolerance",
+        row["elastic_rps"], row["static_rps"], tolerance)
+
+
 def _print_fleet_stats(label, st):
     """The satellite telemetry: per-replica queue depth, residency
     hit/miss, rounds, steals — printed so the study is readable."""
@@ -601,6 +827,12 @@ def main(argv=None):
     ap.add_argument("--steal", action="store_true",
                     help="run the work-stealing study (uses --replicas, "
                          "default 4) instead of the sharded study")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the elastic-autoscaling study (bursty "
+                         "trace, elastic vs static fleet)")
+    ap.add_argument("--max-replicas", type=int, default=4,
+                    help="autoscaler ceiling / static-fleet size for "
+                         "--autoscale")
     ap.add_argument("--requests", type=int, default=240,
                     help="requests per drain for --replicas/--steal")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
@@ -614,6 +846,10 @@ def main(argv=None):
                     help="dump the --replicas/--steal study row to this "
                          "JSON path")
     args = ap.parse_args(argv)
+    if args.autoscale:
+        return autoscale_main(args.max_replicas, args.requests,
+                              args.backend, args.tolerance, args.json,
+                              args.policy)
     if args.steal:
         return stealing_main(args.replicas or 4, args.requests,
                              args.backend, args.tolerance, args.json,

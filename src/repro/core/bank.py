@@ -286,7 +286,32 @@ class ContextBank:
             return slot
         ctx = self._ctx_cache.get(key)
         if ctx is None:
-            ctx = make_context(program, self.s_max, self.dtype)
+            # the encode is deterministic over the immutable program, so
+            # memoize the built Context ON the program (like
+            # context_key): a second bank loading the same kernel — an
+            # elastic scale-up warming a fresh replica, a migration, a
+            # steal prefetch — pays a device write, not a re-run of the
+            # Python encode loop.  The memo holds HOST (numpy) arrays:
+            # it lives as long as the Program (the caller's object, GC'd
+            # with it), so it must not pin device memory — the bounded
+            # _ctx_cache rationale above stays true, device residency is
+            # still capped by bank capacity.  The Context is read-only
+            # to every bank (slot writes are functional), so sharing is
+            # safe.
+            memo = getattr(program, "_ctx_memo", None)
+            if memo is None:
+                memo = program._ctx_memo = {}
+            mkey = (self.s_max, np.dtype(self.dtype).str)
+            ctx = memo.get(mkey)
+            if ctx is None:
+                ctx = make_context(program, self.s_max, self.dtype)
+                ctx = dataclasses.replace(
+                    ctx, op=np.asarray(ctx.op),
+                    src_a=np.asarray(ctx.src_a),
+                    src_b=np.asarray(ctx.src_b),
+                    imm=np.asarray(ctx.imm),
+                    out_idx=np.asarray(ctx.out_idx))
+                memo[mkey] = ctx
             self._ctx_cache[key] = ctx
             while len(self._ctx_cache) > self._ctx_cache_cap:
                 self._ctx_cache.popitem(last=False)
@@ -330,6 +355,37 @@ class ContextBank:
         self._key_gen[key] = self.generation
         self.n_loads += 1
         return slot
+
+    # ------------------------------------------------------------- lifecycle
+    def retire(self) -> None:
+        """Decommission this bank: drop every residency and bump the
+        generation.
+
+        The elastic fleet calls this while draining a replica, AFTER its
+        in-flight rounds have retired (pins released) and its queued work
+        has been evacuated.  Clearing the residency map makes every
+        ``peek`` miss, and the generation bump is belt-and-braces: any
+        external residency snapshot (a :class:`BankDirectory` entry that
+        escaped the drain's unpublish, a caller-cached ``(slot,
+        generation)`` pair) can never validate against this bank again —
+        stale lookups fall back to the router's miss path instead of
+        dispatching into a decommissioned replica.
+
+        Raises :class:`BankError` if pinned contexts remain: a pin means
+        an in-flight round still references these slots, and retiring
+        under it would be exactly the slot-reuse corruption pins exist to
+        prevent.
+        """
+        if self._pins:
+            names = sorted(k[0] for k in self._pins)
+            raise BankError(
+                f"retire with {len(self._pins)} pinned contexts "
+                f"({', '.join(names)}); retire in-flight rounds first")
+        self._lru.clear()
+        self._meta.clear()
+        self._key_gen.clear()
+        self._free = list(range(self.capacity))
+        self.generation += 1
 
     # ------------------------------------------------------------- executor
     def tree(self):
@@ -381,6 +437,7 @@ class BankDirectory:
         self.n_stale = 0
         self.n_unknown = 0
         self.n_republished = 0
+        self.n_unpublished = 0
 
     def __len__(self) -> int:
         return len(self._map)
@@ -411,6 +468,30 @@ class BankDirectory:
     def drop(self, kernel) -> None:
         self._map.pop(context_key(getattr(kernel, "program", kernel)), None)
 
+    def remove_replica(self, replica: int) -> int:
+        """Unpublish every entry homed on ``replica`` and shift higher
+        replica ids down by one; returns how many entries were dropped.
+
+        The elastic fleet compacts replica indices when it decommissions
+        a replica (``ShardedOverlayServer.drain_replica``): entries on
+        the dying replica are unpublished (their contexts are gone — a
+        lookup must take the miss path), and every surviving entry's
+        replica id is renumbered to keep pointing at the SAME bank in the
+        compacted list.  Generation validation still backstops the whole
+        move: an entry that somehow escapes this (published concurrently,
+        or by a caller holding a stale fleet view) fails its ``peek``
+        check against whatever bank now sits at that index and is dropped
+        at ``locate`` time.
+        """
+        dropped = [k for k, e in self._map.items() if e.replica == replica]
+        for k in dropped:
+            del self._map[k]
+        for e in self._map.values():
+            if e.replica > replica:
+                e.replica -= 1
+        self.n_unpublished += len(dropped)
+        return len(dropped)
+
     def locate(self, kernel, banks) -> int | None:
         """Validated lookup: the owning replica id, or None on miss/stale.
 
@@ -439,4 +520,5 @@ class BankDirectory:
     def stats(self) -> dict:
         return {"entries": len(self._map), "fresh": self.n_fresh,
                 "stale": self.n_stale, "unknown": self.n_unknown,
-                "republished": self.n_republished}
+                "republished": self.n_republished,
+                "unpublished": self.n_unpublished}

@@ -56,6 +56,23 @@ def device_sharing(devices) -> dict[int, int]:
     return sharing
 
 
+def least_shared_device(pool, in_use):
+    """The pool device hosting the fewest current serving replicas.
+
+    ``pool`` is the candidate device list (usually ``jax.devices()``),
+    ``in_use`` the fleet's current placement list (one entry per live
+    replica, duplicates meaning replicas share that device).  This is the
+    elastic-autoscaling placement rule: a new replica lands where it
+    oversubscribes the hardware least, so grown capacity is real
+    parallelism for as long as physical devices remain and only then
+    time-slicing.  Ties break on device id for determinism.
+    """
+    if not pool:
+        raise ValueError("least_shared_device: empty device pool")
+    sharing = device_sharing(in_use)
+    return min(pool, key=lambda d: (sharing.get(d.id, 0), d.id))
+
+
 def make_mesh_from_devices(devices, model_parallel: int = 16):
     """Elastic re-mesh: build the largest (data, model) mesh from a live
     device list (used by distributed.elastic on simulated failures)."""

@@ -39,8 +39,14 @@ pipeline (``Overlay.plan/assemble/execute/collect``, see core/overlay.py):
 ``ShardedOverlayServer`` scales the engine across devices: N replicas
 (each an ``OverlayServer`` pinned to one device of
 ``launch.mesh.make_serving_mesh`` with its own bank) behind the router
-policy.  Results stay bit-for-bit identical to the single-bank engine
-(tests/test_sharded_serving.py, tests/test_sched_policies.py).
+policy.  The fleet is ELASTIC: ``add_replica``/``drain_replica`` mutate
+the replica set under live traffic (drains are loss-free — queued work
+evacuates over the steal/adopt path, in-flight rounds retire, delivered
+results survive in an orphan store), and an optional
+``sched.autoscale.AutoscalePolicy`` drives both from observed queue
+pressure.  Results stay bit-for-bit identical to the single-bank engine
+(tests/test_sharded_serving.py, tests/test_sched_policies.py,
+tests/test_autoscale.py).
 
 See docs/SERVING.md for the engine guide and docs/SCHEDULING.md for the
 policy interfaces.
@@ -248,6 +254,17 @@ class OverlayServer:
                                             self.round_kernels)
 
     # ---------------------------------------------------------- work stealing
+    def queued_group_keys(self) -> dict:
+        """``{context key: kernel}`` over every QUEUED request — the units
+        ``steal_queued`` moves.  The stealing router and the elastic
+        drain path (``ShardedOverlayServer.drain_replica``) enumerate a
+        replica's evacuable work through this."""
+        groups: dict = {}
+        for flow in self._flows.values():
+            for r in flow.queue:
+                groups.setdefault(r.key, r.kernel)
+        return groups
+
     def steal_queued(self, key: tuple) -> list[tuple[OverlayRequest, dict]]:
         """Remove every QUEUED request whose context key is ``key`` and
         hand back ``(request, telemetry record)`` pairs, per-tenant
@@ -551,6 +568,17 @@ class ShardedOverlayServer:
     ``launch.mesh.make_serving_mesh`` (devices wrap when the fleet is
     larger than the machine — correctness never depends on real device
     count, which is how the differential tests run 2/4/8 replicas in CI).
+
+    * ELASTICITY — the replica set is mutable under live traffic:
+      ``add_replica()`` grows the fleet onto the least-shared physical
+      device, ``drain_replica(i)`` decommissions one replica loss-free
+      (evacuate queued work via steal/adopt, retire in-flight rounds,
+      orphan delivered-but-unclaimed results at the fleet level,
+      unpublish + generation-bump its directory entries, compact
+      indices).  Passing ``autoscaler=`` (see
+      :mod:`repro.sched.autoscale`) automates both from queue pressure,
+      observed on every drain pass and autopump tick; ``flush_sync``
+      never scales — it stays the oracle.
     """
 
     def __init__(self, n_replicas: int = 2, bank_capacity: int = 8,
@@ -564,10 +592,13 @@ class ShardedOverlayServer:
                  clock=time.monotonic, metrics_window: int = 65536,
                  devices=None, migrate_factor: float = 4.0,
                  migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
-                 steal_min_tiles: int = 4):
+                 steal_min_tiles: int = 4, autoscaler=None):
         from repro.launch.mesh import make_serving_mesh
-        self.devices = make_serving_mesh(n_replicas, devices)
-        self.n_replicas = len(self.devices)
+        #: candidate devices for replica placement — the pool elastic
+        #: scale-ups draw from (add_replica picks its least-shared member)
+        self._device_pool = (list(devices) if devices is not None
+                             else list(jax.devices()))
+        self.devices = make_serving_mesh(n_replicas, self._device_pool)
         self.tile = tile
         # each replica builds its OWN round policy (policies may carry
         # feedback state, e.g. DynamicTilePolicy's adapted budget): a
@@ -576,15 +607,20 @@ class ShardedOverlayServer:
         # replicas — fine for stateless pacing, use a factory otherwise.
         def _policy_for_replica():
             return round_policy() if callable(round_policy) else round_policy
-        # replicas do NOT get admission policies: admission is global
+        self._policy_factory = _policy_for_replica
+        #: constructor knobs every replica shares — kept so elastic
+        #: scale-ups (``add_replica``) build replicas identical to the
+        #: founding fleet.  Replicas do NOT get admission policies:
+        #: admission is global.
+        self._replica_kw = dict(
+            bank_capacity=bank_capacity, tile=tile, backend=backend,
+            s_max=s_max, dtype=dtype, max_outputs=max_outputs,
+            max_inflight=max_inflight, round_kernels=round_kernels,
+            quantum_tiles=quantum_tiles, clock=clock,
+            metrics_window=metrics_window)
         self.replicas = [
-            OverlayServer(bank_capacity=bank_capacity, tile=tile,
-                          backend=backend, s_max=s_max, dtype=dtype,
-                          max_outputs=max_outputs, max_inflight=max_inflight,
-                          round_kernels=round_kernels,
-                          quantum_tiles=quantum_tiles,
-                          round_policy=_policy_for_replica(), clock=clock,
-                          metrics_window=metrics_window, device=d)
+            OverlayServer(round_policy=_policy_for_replica(), device=d,
+                          **self._replica_kw)
             for d in self.devices]
         #: the routing policy (see repro.sched.routing); ``steal=True``
         #: without an explicit router builds a WorkStealingRouter
@@ -593,17 +629,46 @@ class ShardedOverlayServer:
             migrate_min_tiles=migrate_min_tiles,
             migrate_cooldown=migrate_cooldown,
             steal_min_tiles=steal_min_tiles)
+        #: the fleet-sizing policy (see repro.sched.autoscale); None =
+        #: static fleet.  Observed once per drain pass / pump tick.
+        self.autoscaler = autoscaler
         self.admission = AdmissionControl(admission, default_admission,
                                           clock=clock)
         self.clock = clock
         self.metrics_window = metrics_window
         self._owner: dict[int, tuple[int, int]] = {}   # global -> (rep, loc)
         self._global: list[dict[int, int]] = [
-            {} for _ in range(self.n_replicas)]        # rep: loc -> global
+            {} for _ in self.replicas]                 # rep: loc -> global
+        #: results whose replica was decommissioned before the client
+        #: claimed them: global ticket -> outputs (and the matching
+        #: telemetry records).  Every claim path checks here first.
+        self._orphaned: OrderedDict[int, list] = OrderedDict()
+        self._orphan_records: dict[int, dict] = {}
         self._claimed: deque[int] = deque()
         self._next_ticket = 0
         self._rr = 0                                   # retire fan-in ptr
         self.n_submits = 0
+        # elastic-fleet telemetry
+        self._born = [self.clock() for _ in self.replicas]
+        #: high-water fleet size since construction (benchmarks reset it
+        #: per measurement window to integrate capacity over time)
+        self.peak_replicas = len(self.replicas)
+        self.n_scale_ups = 0
+        self.n_scale_downs = 0
+        self.n_evacuated_requests = 0
+        self.n_evacuated_tiles = 0
+        self.n_replicas_retired = 0
+        self.retired_lifetime_s = 0.0
+        # work served by since-retired replicas (stats() folds these into
+        # the fleet aggregates, which otherwise sum live replicas only)
+        self._retired_rounds = 0
+        self._retired_requests = 0
+        self._retired_evictions = 0
+
+    @property
+    def n_replicas(self) -> int:
+        """Live replica count (mutates under elastic autoscaling)."""
+        return len(self.replicas)
 
     @property
     def banks(self):
@@ -649,6 +714,201 @@ class ShardedOverlayServer:
             self._owner[g] = (thief, loc)
             self._global[thief][loc] = g
 
+    def move_group(self, victim: int, thief: int, key: tuple,
+                   kernel) -> list:
+        """Move one queued kernel-group from ``victim`` to ``thief``;
+        returns the moved requests (possibly empty).
+
+        THE single implementation of the cross-replica move sequence —
+        ``WorkStealingRouter.rebalance`` and ``drain_replica`` both call
+        it — so the ordering invariant lives in one place: the thief's
+        bank prefetches the context FIRST (a ``BankError`` propagates
+        with nothing moved — the caller picks another thief or skips),
+        the directory is republished so follow-up traffic chases the
+        work, then the queued requests leave the victim and are adopted
+        under fresh thief tickets with their global tickets re-homed.
+        In-flight rounds and pins are never touched.
+        """
+        thief_rep = self.replicas[thief]
+        thief_rep.bank.prefetch([kernel])
+        self.directory.republish_current(kernel, thief, thief_rep.bank)
+        stolen = self.replicas[victim].steal_queued(key)
+        self.adopt_stolen(victim, thief, stolen)
+        return [req for req, _ in stolen]
+
+    # ------------------------------------------------------- elastic fleet
+    def add_replica(self, device=None) -> int:
+        """Grow the fleet by one replica; returns its index.
+
+        The new replica is a full ``OverlayServer`` built with the
+        founding fleet's knobs (its own round policy instance, its own
+        device-committed ``ContextBank``), placed on ``device`` or — the
+        autoscaling default — on the physical device currently hosting
+        the FEWEST replicas (``launch.mesh.least_shared_device``), so
+        grown capacity is real parallelism before it is time-slicing.
+        The router needs no registration: an empty bank simply never
+        validates a directory entry, and the least-loaded fallback (plus
+        a stealing router's ``rebalance``) starts feeding the newcomer
+        immediately.
+        """
+        from repro.launch.mesh import least_shared_device
+        if device is None:
+            device = least_shared_device(self._device_pool, self.devices)
+        rep = OverlayServer(round_policy=self._policy_factory(),
+                            device=device, **self._replica_kw)
+        self.replicas.append(rep)
+        self.devices.append(device)
+        self._global.append({})
+        self._born.append(self.clock())
+        self.peak_replicas = max(self.peak_replicas, len(self.replicas))
+        self.n_scale_ups += 1
+        return len(self.replicas) - 1
+
+    def drain_replica(self, i: int) -> dict:
+        """Loss-free decommission of replica ``i``; returns telemetry.
+
+        The drain lifecycle (see docs/SCHEDULING.md#autoscaling):
+
+        1. EVACUATE queued work: every queued kernel-group moves to the
+           least-loaded surviving replica over the existing steal/adopt
+           path — context prefetched on the target FIRST, directory
+           republished, global tickets re-homed (``adopt_stolen``), so
+           clients notice nothing.  A momentarily all-pinned target
+           retires one of its in-flight rounds and the evacuation
+           retries.
+        2. RETIRE in-flight rounds: delivered through the normal path,
+           releasing their pins — pins are never broken, launched rounds
+           always complete on the device that planned them.
+        3. ORPHAN delivered-but-unclaimed results (and the replica's
+           ticket telemetry) into a fleet-level store; every claim path
+           (``result``/``try_result``/``as_completed``/``flush``) checks
+           it first, so tickets survive their replica.
+        4. UNPUBLISH the replica's ``BankDirectory`` entries and retire
+           its bank (generation bump): any stale residency snapshot now
+           fails validation and falls back to the miss path instead of
+           resolving to a decommissioned replica.
+        5. DECOMMISSION: the replica leaves the fleet and indices
+           compact (directory + ticket maps renumbered).
+
+        Raises ``ValueError`` for the last replica (a fleet of zero can
+        serve nothing; ``AutoscalePolicy.min_replicas`` should prevent
+        this upstream) and ``IndexError`` for an unknown index.
+        """
+        from repro.core.bank import BankError
+        if not 0 <= i < len(self.replicas):
+            raise IndexError(
+                f"drain_replica: no replica {i} (fleet has "
+                f"{len(self.replicas)})")
+        if len(self.replicas) <= 1:
+            raise ValueError("drain_replica: cannot drain the last replica")
+        rep = self.replicas[i]
+        evac_requests = evac_tiles = 0
+        while rep.queued:
+            # one scan per pass: queued_group_keys walks every queued
+            # request, so iterate the whole group map rather than
+            # rebuilding it per group (the outer while normally runs
+            # once — it only re-enters if a move legitimately left work)
+            for key, kernel in list(rep.queued_group_keys().items()):
+                while True:
+                    order = sorted(
+                        (j for j in range(len(self.replicas)) if j != i),
+                        key=lambda j: self.replicas[j].pending_tiles)
+                    moved = None
+                    for j in order:
+                        try:
+                            moved = self.move_group(i, j, key, kernel)
+                            break
+                        except BankError:
+                            continue
+                    if moved is not None:
+                        break
+                    # every surviving bank is momentarily all pinned:
+                    # retire the least-loaded survivor's oldest round
+                    # (released pins free slots) and retry — pins only
+                    # exist while rounds are in flight, so this always
+                    # makes progress
+                    survivor = self.replicas[order[0]]
+                    if not survivor._inflight:
+                        raise BankError(
+                            "drain_replica: no surviving replica can "
+                            "host the evacuated context")
+                    survivor._retire_oldest()
+                evac_requests += len(moved)
+                evac_tiles += sum(r.cost for r in moved)
+        while rep._inflight:
+            rep._retire_oldest()
+        orphaned_now = len(rep._done)
+        for loc, outs in rep._done.items():
+            self._orphaned[self._global[i][loc]] = outs
+        rep._done.clear()
+        for loc, record in rep._records.items():
+            g = self._global[i].get(loc)
+            if g is not None:      # claimed + pruned records have no global
+                self._orphan_records[g] = record
+        for g in self._global[i].values():
+            self._owner.pop(g, None)
+        self.directory.remove_replica(i)
+        rep.bank.retire()
+        # fold the dying replica's work counters into the fleet-level
+        # accumulators BEFORE it leaves: stats() sums live replicas, and
+        # a study that drains replicas mid-run must not undercount the
+        # rounds/requests/evictions they served
+        self._retired_rounds += rep.n_rounds
+        self._retired_requests += rep.n_requests
+        self._retired_evictions += rep.bank.n_evictions
+        self.replicas.pop(i)
+        self.devices.pop(i)
+        self._global.pop(i)
+        lifetime = self.clock() - self._born.pop(i)
+        self.n_scale_downs += 1
+        self.n_replicas_retired += 1
+        self.retired_lifetime_s += lifetime
+        self.n_evacuated_requests += evac_requests
+        self.n_evacuated_tiles += evac_tiles
+        self._owner = {t: ((r - 1, loc) if r > i else (r, loc))
+                       for t, (r, loc) in self._owner.items()}
+        return {"replica": i, "evacuated_requests": evac_requests,
+                "evacuated_tiles": evac_tiles,
+                "orphaned_results": orphaned_now,
+                "lifetime_s": lifetime}
+
+    def autoscale_once(self) -> int:
+        """Observe the autoscaler and apply its decisions; returns how
+        many actions were applied.  Called from every drain pass and the
+        pump tick; a no-op without an autoscaler.  The shell re-checks
+        its own invariants (never below one replica, index still live),
+        so a policy bug degrades to a skipped action."""
+        if self.autoscaler is None:
+            return 0
+        # "down" indices refer to the fleet AS OBSERVED: applying an
+        # earlier action compacts indices, so resolve each index to its
+        # replica object first and re-look it up at apply time — a later
+        # action from the same snapshot can never target the wrong
+        # replica, and one already drained degrades to a skipped action
+        snapshot = list(self.replicas)
+        # the shell-side runaway guard: honor the policy's own declared
+        # ceiling (PressureAutoscaler always carries one), so a buggy
+        # observe() that returns "up" forever degrades to skipped
+        # actions instead of growing the fleet to OOM under a pump tick
+        limit = getattr(self.autoscaler, "max_replicas", None)
+        applied = 0
+        for kind, idx in self.autoscaler.observe(self):
+            if kind == "up":
+                if limit is not None and len(self.replicas) >= limit:
+                    continue
+                self.add_replica()
+                applied += 1
+            elif (kind == "down" and idx is not None
+                    and 0 <= idx < len(snapshot)):
+                try:
+                    live = self.replicas.index(snapshot[idx])
+                except ValueError:
+                    continue
+                if len(self.replicas) > 1:
+                    self.drain_replica(live)
+                    applied += 1
+        return applied
+
     # ----------------------------------------------------------------- queue
     def submit(self, kernel, xs, tenant: str = DEFAULT_TENANT) -> int:
         """Admit globally, route via the router policy, enqueue on one
@@ -674,17 +934,39 @@ class ShardedOverlayServer:
         return {self._global[rep][loc]: ys
                 for loc, ys in local_results.items()}
 
+    def _forget(self, ticket: int) -> None:
+        """Drop one claimed ticket's bookkeeping: its routing maps, or —
+        for a ticket whose replica was decommissioned — its orphan
+        telemetry.  The single forget path shared by the metrics-window
+        prune and ``reset_metrics``."""
+        rep_loc = self._owner.pop(ticket, None)
+        if rep_loc is not None:
+            self._global[rep_loc[0]].pop(rep_loc[1], None)
+        else:
+            self._orphan_records.pop(ticket, None)
+
     def _note_claimed(self, tickets) -> None:
         self._claimed.extend(tickets)
         while len(self._claimed) > self.metrics_window:
-            t = self._claimed.popleft()
-            rep_loc = self._owner.pop(t, None)
-            if rep_loc is not None:
-                self._global[rep_loc[0]].pop(rep_loc[1], None)
+            self._forget(self._claimed.popleft())
+
+    def _claim_orphan(self, ticket: int):
+        """Claim/inspect a ticket whose replica was decommissioned:
+        returns its outputs, raises KeyError if already claimed, or
+        returns None when the ticket is not an orphan at all."""
+        if ticket in self._orphaned:
+            self._note_claimed([ticket])
+            return self._orphaned.pop(ticket)
+        if ticket in self._orphan_records:
+            # record survives, result gone: it was claimed already
+            raise KeyError(f"ticket {ticket} already claimed")
+        return None
 
     def try_result(self, ticket: int):
         """Non-blocking claim across the fleet (see
         ``OverlayServer.try_result``)."""
+        if ticket in self._orphaned or ticket in self._orphan_records:
+            return self._claim_orphan(ticket)
         if ticket not in self._owner:
             raise KeyError(f"unknown ticket {ticket}")
         rep, loc = self._owner[ticket]
@@ -695,7 +977,12 @@ class ShardedOverlayServer:
 
     def result(self, ticket: int):
         """Block until the ticket's outputs are ready (drives only the
-        owning replica's pipeline); one claim per ticket."""
+        owning replica's pipeline); one claim per ticket.  A ticket whose
+        replica was drained is served from the fleet's orphan store (the
+        drain delivered it) or from its adoptive replica (the drain
+        evacuated it) — the client never sees the difference."""
+        if ticket in self._orphaned or ticket in self._orphan_records:
+            return self._claim_orphan(ticket)
         if ticket not in self._owner:
             raise KeyError(f"unknown ticket {ticket}")
         rep, loc = self._owner[ticket]
@@ -706,11 +993,17 @@ class ShardedOverlayServer:
     def as_completed(self):
         """Yield ``(ticket, outputs)`` in completion order across ALL
         replicas; keeps every replica's pipeline full while iterating
-        (rebalancing queued work first when the router steals) and
+        (observing the autoscaler and rebalancing queued work first) and
         retires rounds fan-in round-robin so no replica's results are
-        held back behind another's backlog."""
+        held back behind another's backlog.  Results orphaned by a
+        replica drain are yielded like any other completion."""
         while True:
             yielded = False
+            while self._orphaned:
+                t, outs = self._orphaned.popitem(last=False)
+                self._note_claimed([t])
+                yielded = True
+                yield t, outs
             for rep_id, rep in enumerate(self.replicas):
                 while rep._done:
                     loc, outs = rep._done.popitem(last=False)
@@ -721,25 +1014,33 @@ class ShardedOverlayServer:
                     yield t, outs
             if yielded:
                 continue
+            self.autoscale_once()
             self.router.rebalance(self)
             for rep in self.replicas:
                 rep._fill_pipeline()
             live = [rep for rep in self.replicas if rep._inflight]
             if not live:
+                if self._orphaned:      # a scale-down orphaned results
+                    continue
                 return
             live[self._rr % len(live)]._retire_oldest()
             self._rr += 1
 
     def pump_once(self) -> bool:
         """One unit of fleet drain work for ``sched.pump.AutoPump``:
-        rebalance queued work (stealing routers), top up every replica's
-        pipeline, deliver one round (fan-in round-robin)."""
+        observe the autoscaler (this tick is how BACKGROUND serving
+        scales — including idle ticks, which is where scale-downs come
+        from), rebalance queued work (stealing routers), top up every
+        replica's pipeline, deliver one round (fan-in round-robin).
+        Returns True when any round was delivered or the fleet changed
+        size, so the pump keeps ticking through a scaling burst."""
+        scaled = self.autoscale_once()
         self.router.rebalance(self)
         for rep in self.replicas:
             rep._fill_pipeline()
         live = [rep for rep in self.replicas if rep._inflight]
         if not live:
-            return False
+            return scaled > 0
         live[self._rr % len(live)]._retire_oldest()
         self._rr += 1
         return True
@@ -751,9 +1052,16 @@ class ShardedOverlayServer:
         them, so the per-device rounds execute concurrently; within each
         replica the usual round pipelining applies.  A stealing router
         rebalances queued work each pass, so an idle replica picks up a
-        backlogged replica's queue instead of going dark.
+        backlogged replica's queue instead of going dark.  The
+        autoscaler is observed once per pass, so the replica set may
+        GROW or SHRINK mid-flush: the pass re-reads the fleet after
+        every mutation, a drained replica's queued work re-homes through
+        the same steal/adopt path, and its delivered results join the
+        returned dict via the orphan store — no ticket is lost to a
+        resize.
         """
         while True:
+            self.autoscale_once()
             self.router.rebalance(self)
             for rep in self.replicas:
                 rep._fill_pipeline()
@@ -765,23 +1073,35 @@ class ShardedOverlayServer:
         results: dict[int, list] = {}
         for rep_id, rep in enumerate(self.replicas):
             results.update(self._to_global(rep_id, rep.flush()))
+        results.update(self._orphaned)
+        self._orphaned.clear()
         self._note_claimed(results)
         return results
 
     def flush_sync(self) -> dict[int, list]:
         """Barrier drain, replica by replica — the sharded oracle path
         (no cross-replica overlap, no intra-replica pipelining, no
-        stealing)."""
+        stealing, no autoscaling).  Results already orphaned by an
+        earlier drain are still returned — the oracle claims everything
+        undelivered, it just never mutates the fleet itself."""
         results: dict[int, list] = {}
         for rep_id, rep in enumerate(self.replicas):
             results.update(self._to_global(rep_id, rep.flush_sync()))
+        results.update(self._orphaned)
+        self._orphaned.clear()
         self._note_claimed(results)
         return results
 
     # --------------------------------------------------------------- metrics
     def record(self, ticket: int) -> dict:
-        """Telemetry for one global ticket (adds the serving replica)."""
-        rep, loc = self._owner[ticket]
+        """Telemetry for one global ticket (adds the serving replica;
+        ``replica=None`` for tickets whose replica was decommissioned)."""
+        rep_loc = self._owner.get(ticket)
+        if rep_loc is None:
+            rec = dict(self._orphan_records[ticket])
+            rec["replica"] = None
+            return rec
+        rep, loc = rep_loc
         rec = self.replicas[rep].record(loc)
         rec["replica"] = rep
         return rec
@@ -793,6 +1113,9 @@ class ShardedOverlayServer:
                 t = self._global[rep_id].get(loc)
                 if t is not None:
                     out[t] = lat
+        for t, rec in self._orphan_records.items():
+            if rec["t_done"] is not None:
+                out[t] = rec["t_done"] - rec["t_submit"]
         return out
 
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
@@ -812,11 +1135,15 @@ class ShardedOverlayServer:
         # (delivered-but-unclaimed tickets are not in _claimed and keep
         # their routing)
         while self._claimed:
-            t = self._claimed.popleft()
-            rep_loc = self._owner.pop(t, None)
-            if rep_loc is not None:
-                self._global[rep_loc[0]].pop(rep_loc[1], None)
+            self._forget(self._claimed.popleft())
         self.router.reset_metrics()
+        # scaling counters are per-study telemetry like hit rates; the
+        # autoscaler's own decision counters reset with them (its control
+        # state — streaks, cooldown — is not a metric and survives)
+        self.n_scale_ups = self.n_scale_downs = 0
+        self.n_evacuated_requests = self.n_evacuated_tiles = 0
+        if self.autoscaler is not None:
+            self.autoscaler.reset_metrics()
 
     def stats(self) -> dict:
         per = [rep.stats() for rep in self.replicas]
@@ -825,10 +1152,22 @@ class ShardedOverlayServer:
              "queue_depth": [p["queued"] for p in per],
              "queued_tiles": [p["queued_tiles"] for p in per],
              "per_replica": per,
-             "rounds": sum(p["rounds"] for p in per),
-             "requests": sum(p["requests"] for p in per),
-             "evictions": sum(p["evictions"] for p in per)}
+             "rounds": sum(p["rounds"] for p in per) + self._retired_rounds,
+             "requests": (sum(p["requests"] for p in per)
+                          + self._retired_requests),
+             "evictions": (sum(p["evictions"] for p in per)
+                           + self._retired_evictions),
+             "scale_ups": self.n_scale_ups,
+             "scale_downs": self.n_scale_downs,
+             "evacuated_requests": self.n_evacuated_requests,
+             "evacuated_tiles": self.n_evacuated_tiles,
+             "replicas_retired": self.n_replicas_retired,
+             "retired_lifetime_s": self.retired_lifetime_s,
+             "peak_replicas": self.peak_replicas,
+             "orphaned_results": len(self._orphaned)}
         s.update(self.router.stats())
+        if self.autoscaler is not None:
+            s.update(self.autoscaler.stats())
         return s
 
 

@@ -9,6 +9,9 @@ fabric from placement policy:
 
 * :mod:`repro.sched.admission` — per-tenant token-bucket admission
   (``TokenBucket``, ``AdmissionControl``, ``AdmissionError``);
+* :mod:`repro.sched.autoscale` — elastic fleet sizing
+  (``AutoscalePolicy`` protocol: ``PressureAutoscaler`` grows/drains
+  replicas from observed queue pressure);
 * :mod:`repro.sched.rounds` — round formation (``RoundPolicy`` protocol:
   ``DeficitRoundRobin``, ``CoalescingPolicy``, ``DynamicTilePolicy``);
 * :mod:`repro.sched.routing` — replica selection for the sharded fleet
@@ -21,6 +24,7 @@ See docs/SCHEDULING.md for the policy-author guide.
 
 from repro.sched.admission import (AdmissionControl, AdmissionError,
                                    TokenBucket)
+from repro.sched.autoscale import AutoscalePolicy, PressureAutoscaler
 from repro.sched.pump import AutoPump
 from repro.sched.rounds import (ROUND_POLICIES, CoalescingPolicy,
                                 DeficitRoundRobin, DynamicTilePolicy, Flow,
@@ -31,6 +35,7 @@ from repro.sched.routing import (ResidencyRouter, RouterPolicy,
 
 __all__ = [
     "AdmissionControl", "AdmissionError", "TokenBucket",
+    "AutoscalePolicy", "PressureAutoscaler",
     "AutoPump",
     "ROUND_POLICIES", "RoundPolicy", "DeficitRoundRobin",
     "CoalescingPolicy", "DynamicTilePolicy", "Flow", "OverlayRequest",

@@ -25,6 +25,14 @@ Concurrency model — one lock, coarse granularity:
 * ``close()`` (or leaving the ``with`` block) stops the thread cleanly;
   queued work is NOT dropped — it is simply no longer pumped and can be
   drained explicitly afterwards.
+* ELASTIC fleets autoscale on the pump tick: the sharded engine's
+  ``pump_once`` observes its ``AutoscalePolicy`` every call — including
+  IDLE calls, which the pump keeps issuing at ``poll_interval`` while
+  parked.  Those idle ticks are where background scale-DOWNS come from
+  (an idle replica's streak can only accrue if someone keeps observing),
+  and ``pump_once`` returns True for a tick that only resized the fleet,
+  so the pump stays hot through a scaling burst instead of sleeping
+  mid-resize.
 
 Waiters (``result``/``wait_idle``) sleep on a condition variable that
 the pump notifies after every delivered round; if the pump is closed

@@ -41,7 +41,8 @@ class RouterPolicy(Protocol):
     ``fleet`` is the ``ShardedOverlayServer`` (replicas, banks, adoption
     hooks).  ``route`` returns the replica index that should enqueue the
     submit; ``rebalance`` may move queued requests between replicas (via
-    ``fleet.adopt_stolen``) and returns how many groups moved.
+    ``fleet.move_group``, the shared steal/evacuation sequence) and
+    returns how many groups moved.
     """
 
     def route(self, kernel, fleet) -> int: ...
@@ -151,7 +152,8 @@ class ResidencyRouter:
     def reset_metrics(self) -> None:
         self.n_hits = self.n_misses = self.n_migrations = 0
         d = self.directory
-        d.n_fresh = d.n_stale = d.n_unknown = d.n_republished = 0
+        d.n_fresh = d.n_stale = d.n_unknown = 0
+        d.n_republished = d.n_unpublished = 0
 
 
 class WorkStealingRouter(ResidencyRouter):
@@ -237,20 +239,19 @@ class WorkStealingRouter(ResidencyRouter):
             thief = min(idle, key=lambda i: (
                 dev_load.get(devices[i].id, 0) if devices is not None else 0,
                 fleet.replicas[i].pending_tiles))
-            thief_rep = fleet.replicas[thief]
             try:
-                # prefetch BEFORE the group moves: if the thief's bank is
-                # momentarily all pinned, skip — never strand requests on
-                # a replica that cannot host their context
-                thief_rep.bank.prefetch([kernel])
-                self.directory.republish_current(kernel, thief,
-                                                 thief_rep.bank)
+                # fleet.move_group is the one implementation of the move
+                # sequence (prefetch on the thief BEFORE anything moves —
+                # a momentarily all-pinned thief bank raises and the
+                # sweep ends, never stranding requests on a replica that
+                # cannot host their context — then directory republish,
+                # then steal + adopt); drain_replica evacuates through
+                # the same path
+                stolen = fleet.move_group(victim, thief, key, kernel)
             except BankError:
                 break
-            stolen = fleet.replicas[victim].steal_queued(key)
             if not stolen:
                 break
-            fleet.adopt_stolen(victim, thief, stolen)
             self.n_steals += 1
             self.n_stolen_requests += len(stolen)
             moved += 1

@@ -101,7 +101,22 @@ def test_tm_equals_spatial(arch):
     b = np.asarray(lg_sp, np.float32)
     # bf16 + different XLA fusion orders: structural equivalence check
     assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999
-    assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.97
+    # argmax may legitimately flip where the top two logits are a
+    # NEAR-TIE (zamba2/phi3.5-moe flip 2-4 of 64 positions, varying with
+    # XLA's CPU reduction order, all with top-2 gaps under 0.07 of the
+    # logit std — pure bf16 noise).  A real divergence separates by
+    # O(1) std, so: mostly matching argmax, and every mismatch must be a
+    # near-tie in BOTH executions.
+    am, bm = a.argmax(-1), b.argmax(-1)
+    assert (am == bm).mean() >= 0.9, (am, bm)
+    tie_tol = 0.1 * float(np.std(a))
+    for i, j in np.argwhere(am != bm):
+        ia, ib = am[i, j], bm[i, j]
+        gap = max(abs(a[i, j, ia] - a[i, j, ib]),
+                  abs(b[i, j, ia] - b[i, j, ib]))
+        assert gap < tie_tol, (
+            f"argmax mismatch at {(i, j)} is not a near-tie: "
+            f"top-2 gap {gap:.4f} vs tolerance {tie_tol:.4f}")
 
 
 def test_window_attention_matches_full_when_window_covers():

@@ -11,7 +11,10 @@ seeded-random strategy shim).
 
 The sharded-serving fuzz (bottom of this file) drives random
 interleavings of ``submit`` / ``flush`` / ``flush_sync`` /
-``as_completed`` / ``result`` / direct ``bank.load`` churn across a
+``as_completed`` / ``result`` / direct ``bank.load`` churn — plus FLEET
+MUTATION (``add_replica`` / ``drain_replica`` mixed into the stream, so
+elastic autoscaling's evacuation/orphan/directory-compaction paths are
+covered per example, not just in tests/test_autoscale.py) — across a
 random replica fleet and holds every delivered ticket to the per-request
 single-bank oracle — including the router's stale-directory fallback,
 which each example provokes deliberately (direct loads bump the banks'
@@ -199,8 +202,9 @@ def test_fuzz_sharded_interleaving_bitexact(seed):
                 np.testing.assert_array_equal(np.asarray(y), want)
 
     for _step in range(24):
-        action = rng.choice(["submit", "drain", "load", "result"],
-                            p=[0.6, 0.15, 0.15, 0.1])
+        action = rng.choice(["submit", "drain", "load", "result",
+                             "grow", "shrink"],
+                            p=[0.5, 0.13, 0.12, 0.09, 0.08, 0.08])
         if action == "submit":
             k = kernels[rng.randint(len(kernels))]
             xs = _inputs(k.dfg, int(rng.randint(1 << 30)),
@@ -218,7 +222,7 @@ def test_fuzz_sharded_interleaving_bitexact(seed):
         elif action == "load":
             # directly churn a random replica's bank: evictions bump the
             # residency generation and stale out the directory's entries
-            bank = srv.banks[rng.randint(n_replicas)]
+            bank = srv.banks[rng.randint(len(srv.banks))]
             try:
                 bank.load(kernels[rng.randint(len(kernels))])
             except Exception:       # all-pinned bank mid-flight is legal
@@ -227,10 +231,24 @@ def test_fuzz_sharded_interleaving_bitexact(seed):
             t = list(pending)[rng.randint(len(pending))]
             k, xs = pending[t]
             check({t: srv.result(t)})
+        elif action == "grow" and len(srv.replicas) < 6:
+            srv.add_replica()
+        elif action == "shrink" and len(srv.replicas) > 1:
+            # elastic drain mid-churn: queued work must evacuate, results
+            # must orphan, and the directory must compact — all while the
+            # per-ticket oracle parity below keeps holding
+            srv.drain_replica(int(rng.randint(len(srv.replicas))))
+    # deterministic fleet-mutation coverage in EVERY example: one forced
+    # grow + drain pair before the final drain
+    srv.add_replica()
+    if len(srv.replicas) > 1:
+        srv.drain_replica(0)
     check(srv.flush())
     assert not pending and srv.pending == 0
     for bank in srv.banks:
         assert bank.n_pinned == 0
+    for ent in srv.directory._map.values():
+        assert 0 <= ent.replica < len(srv.replicas)
 
     # deterministic stale-fallback coverage in EVERY example: publish a
     # residency, evict it behind the directory's back, and require the
