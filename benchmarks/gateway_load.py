@@ -1,0 +1,306 @@
+"""Gateway load study: thousands of asyncio connections, bursty zipf traffic.
+
+The serving stack behind ``launch/gateway.py`` is threaded; this study
+exercises the asyncio EDGE the way real traffic would: ``--connections``
+concurrent :class:`~repro.launch.gateway.GatewayConnection`\\ s (the
+default simulates 2000; each is a coroutine, so "thousands of users" is a
+scheduling statement, not a thread count), each sending bursts of
+requests separated by idle lulls, kernel choice zipf-skewed so a few
+(tenant, kernel) streams dominate — the same traffic shape the sharded
+studies use, now arriving through the async front door.
+
+What the study asserts (the edge-backpressure claims, enforced):
+
+* The fleet's undelivered depth NEVER exceeds the configured edge bound:
+  ``peak_fleet_tiles <= max_fleet_tiles * widen_factor`` — shedding /
+  edge-parking engages BEFORE fleet queue depth passes the bound, so an
+  arbitrarily large connection count cannot bloat the in-fleet queue
+  (and with it every tenant's latency tail).
+* Under deliberate overload (offered load >> bound) the edge actually
+  fires: at least one request is shed (``overflow="shed"``) or parked
+  (``overflow="wait"``).
+* ZERO TICKET LOSS: every request that was admitted to the fleet comes
+  back — delivered count equals the gateway's ``edge_submitted``.
+* Spot-checked parity: a sample of delivered outputs matches the
+  ``dfg_eval`` oracle (the soak test in tests/test_gateway.py does the
+  exhaustive bit-parity version against the single-bank oracle).
+
+``--autoscale`` attaches a ``PressureAutoscaler`` so the
+backpressure-autoscaler coupling is live: while a scale-up is pending
+the admission windows widen (reported as ``widened_ticks``), and at
+``max_replicas`` saturation the edge sheds instead of queueing inside
+the fleet.
+
+``--smoke`` shrinks everything for CI; ``--json PATH`` dumps the row for
+``tools/bench_trajectory.py`` (headline metric: ``gateway_rps``).
+
+Run: PYTHONPATH=src python -m benchmarks.gateway_load
+     JAX_DEVICES=2 PYTHONPATH=src python -m benchmarks.gateway_load \
+         --autoscale --smoke --json artifacts/bench/gateway.json
+Reading the output: docs/SERVING.md#the-asyncio-gateway.
+"""
+
+import argparse
+import asyncio
+import json
+import os
+
+# must run before jax initialises (mirrors tests/conftest.py)
+_n = os.environ.get("JAX_DEVICES", "")
+_FLAG = "--xla_force_host_platform_device_count"
+if _n.isdigit() and int(_n) > 1 and _FLAG not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}={int(_n)}".strip())
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.core.vm import dfg_eval
+from repro.launch.gateway import GatewayOverloadedError, OverlayGateway
+
+BATCHES = (64, 128, 256)
+PARITY_SAMPLE = 0.05        # fraction of delivered requests oracle-checked
+
+
+def _make_kernels():
+    return {n: compile_program(benchmark(n))
+            for n in BENCH_NAMES + ("gradient",)}
+
+
+def _zipf_probs(n, s=1.3):
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = 1.0 / ranks ** s
+    return p / p.sum()
+
+
+class _ClientStats:
+    """Aggregated across all client coroutines (single-threaded loop)."""
+
+    def __init__(self):
+        self.delivered = 0
+        self.shed_retries = 0
+        self.parity_checked = 0
+        self.parity_failures = []
+
+
+async def _client(gw, kernels, stats, *, cid, bursts, burst_size,
+                  seed, lull_s):
+    """One connection's life: bursts of zipf-skewed submits, await the
+    burst's results, idle, repeat.  Shed requests retry after the hint —
+    offered load stays offered, so the edge counters reflect pressure,
+    not abandonment."""
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    p = _zipf_probs(len(names))
+    rot = names[cid % len(names):] + names[:cid % len(names)]
+    async with gw.connect(tenant=f"tenant{cid}",
+                          session=f"conn-{cid}") as conn:
+        for _b in range(bursts):
+            reqs = {}
+            for _r in range(burst_size):
+                k = kernels[rot[rng.choice(len(names), p=p)]]
+                b = int(BATCHES[rng.randint(len(BATCHES))])
+                xs = [rng.uniform(-2, 2, (b,)).astype(np.float32)
+                      for _ in k.dfg.inputs]
+                while True:
+                    try:
+                        t = await conn.submit(k, xs)
+                        break
+                    except GatewayOverloadedError as e:
+                        stats.shed_retries += 1
+                        await asyncio.sleep(max(e.retry_after, 1e-4))
+                reqs[t] = (k, xs)
+            async for t, outs in conn.results():
+                stats.delivered += 1
+                if rng.rand() < PARITY_SAMPLE:
+                    _parity_check(stats, *reqs[t], outs)
+            if lull_s:
+                await asyncio.sleep(rng.uniform(0, lull_s))
+
+
+def _parity_check(stats, k, xs, outs):
+    stats.parity_checked += 1
+    ref = dfg_eval(k.dfg, {m: jnp.asarray(v)
+                           for m, v in zip(k.dfg.inputs, xs)})
+    for o, y in zip(k.dfg.outputs, outs):
+        got, want = np.asarray(y), np.asarray(ref[o])
+        if not np.allclose(got, want, rtol=1e-6, atol=1e-6):
+            stats.parity_failures.append(
+                (k.dfg.name, o, float(np.abs(got - want).max())))
+
+
+async def _drive(gw, kernels, args):
+    stats = _ClientStats()
+    t0 = time.perf_counter()
+    await asyncio.gather(*(
+        _client(gw, kernels, stats, cid=i, bursts=args.bursts,
+                burst_size=args.burst_size, seed=args.seed * 7919 + i,
+                lull_s=args.lull)
+        for i in range(args.connections)))
+    wall = time.perf_counter() - t0
+    return stats, wall
+
+
+async def _overload_probe(gw, kernels):
+    """Deterministically saturate the edge: fire 4x the depth bound's
+    worth of tiles in one ``gather`` — submits hit the capacity check
+    back-to-back on the event loop, orders of magnitude faster than any
+    drain, so the edge MUST shed (``overflow="shed"``) or park
+    (``overflow="wait"``) before fleet depth can pass the bound.  Returns
+    (admitted, delivered) so the zero-loss check covers the probe too."""
+    k = kernels[next(iter(kernels))]
+    n = max(8, 2 * gw.max_fleet_tiles)      # batch-256 => 2 tiles each
+    async with gw.connect(tenant="probe", session="probe") as conn:
+        async def one():
+            xs = [np.zeros((256,), np.float32) for _ in k.dfg.inputs]
+            try:
+                return await conn.submit(k, xs)
+            except GatewayOverloadedError:
+                return None
+        tickets = await asyncio.gather(*(one() for _ in range(n)))
+        delivered = await conn.drain()
+        return sum(t is not None for t in tickets), len(delivered)
+
+
+def run_study(args) -> dict:
+    kernels = _make_kernels()
+    gw = OverlayGateway.local(
+        n_replicas=args.replicas, autoscale=args.autoscale,
+        max_replicas=args.max_replicas,
+        bank_capacity=args.bank,
+        max_fleet_tiles=args.max_fleet_tiles,
+        widen_factor=args.widen_factor,
+        overflow=args.overflow)
+
+    async def main():
+        async with gw:
+            # warmup: one request per kernel compiles the dispatch bucket
+            # outside the timed window
+            async with gw.connect(tenant="warmup") as conn:
+                for k in kernels.values():
+                    xs = [np.zeros((BATCHES[0],), np.float32)
+                          for _ in k.dfg.inputs]
+                    await conn.submit(k, xs)
+                await conn.drain()
+            n_warm = gw.n_submitted
+            stats, wall = await _drive(gw, kernels, args)
+            # untimed: force the edge to actually fire, whatever the
+            # drain rate of this machine made of the timed window
+            admitted, got = await _overload_probe(gw, kernels)
+            stats.delivered += got
+            return stats, wall, gw.stats(), n_warm, (admitted, got)
+
+    stats, wall, gstats, n_warm, probe = asyncio.run(main())
+    n_requests = args.connections * args.bursts * args.burst_size
+    row = {
+        "connections": args.connections,
+        "replicas": args.replicas,
+        "devices": jax.device_count(),
+        "autoscale": args.autoscale,
+        "max_replicas": args.max_replicas if args.autoscale else None,
+        "requests": n_requests,
+        "delivered": stats.delivered,
+        "gateway_rps": stats.delivered / wall,
+        "wall_s": wall,
+        "max_fleet_tiles": args.max_fleet_tiles,
+        "widen_factor": args.widen_factor,
+        "overflow": args.overflow,
+        "n_shed": gstats["edge_shed"],
+        "shed_retries": stats.shed_retries,
+        "n_edge_queued": gstats["edge_queued"],
+        "peak_edge_waiters": gstats["peak_edge_waiters"],
+        "peak_fleet_tiles": gstats["peak_fleet_tiles"],
+        "widened_ticks": gstats["widened_ticks"],
+        "edge_submitted": gstats["edge_submitted"] - n_warm,
+        "parity_checked": stats.parity_checked,
+        "probe_admitted": probe[0],
+        "probe_delivered": probe[1],
+    }
+    if args.autoscale:
+        fleet = gstats["fleet"]
+        row["scale_ups"] = fleet.get("scale_ups", 0)
+        row["scale_downs"] = fleet.get("scale_downs", 0)
+    return row, stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--connections", type=int, default=2000)
+    ap.add_argument("--bursts", type=int, default=2,
+                    help="bursts per connection")
+    ap.add_argument("--burst-size", type=int, default=2,
+                    help="requests per burst")
+    ap.add_argument("--lull", type=float, default=0.01,
+                    help="max idle seconds between a connection's bursts")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--bank", type=int, default=6)
+    ap.add_argument("--max-fleet-tiles", type=int, default=64,
+                    help="edge backpressure bound (dispatch tiles)")
+    ap.add_argument("--widen-factor", type=float, default=2.0)
+    ap.add_argument("--overflow", choices=("wait", "shed"),
+                    default="shed")
+    ap.add_argument("--autoscale", action="store_true")
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer connections/requests)")
+    ap.add_argument("--json", dest="json_path", default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.connections = min(args.connections, 200)
+        args.bursts = 1
+        args.burst_size = min(args.burst_size, 2)
+        args.lull = 0.0
+
+    row, stats = run_study(args)
+
+    print("connections,replicas,devices,gateway_rps,n_shed,"
+          "n_edge_queued,peak_fleet_tiles,widened_ticks")
+    print(f"{row['connections']},{row['replicas']},{row['devices']},"
+          f"{row['gateway_rps']:.1f},{row['n_shed']},"
+          f"{row['n_edge_queued']},{row['peak_fleet_tiles']},"
+          f"{row['widened_ticks']}")
+    print(f"# {row['connections']} async connections pushed "
+          f"{row['delivered']} requests at {row['gateway_rps']:.1f} req/s "
+          f"through a {row['replicas']}-replica fleet; edge shed "
+          f"{row['n_shed']} (retried {row['shed_retries']}), parked "
+          f"{row['n_edge_queued']}, fleet depth peaked at "
+          f"{row['peak_fleet_tiles']}/{row['max_fleet_tiles']} tiles "
+          f"(window x{row['widen_factor']:g} while scaling); "
+          f"{row['parity_checked']} results oracle-checked")
+
+    if args.json_path:
+        os.makedirs(os.path.dirname(args.json_path) or ".",
+                    exist_ok=True)
+        with open(args.json_path, "w") as f:
+            json.dump(row, f, indent=1)
+        print(f"# wrote {args.json_path}")
+
+    # ---- the claims this study exists for ---------------------------------
+    assert not stats.parity_failures, (
+        "gateway results diverged from the dfg_eval oracle",
+        stats.parity_failures[:5])
+    assert row["delivered"] == row["edge_submitted"], (
+        "ticket loss: delivered != admitted",
+        row["delivered"], row["edge_submitted"])
+    assert row["probe_admitted"] == row["probe_delivered"], (
+        "ticket loss in the overload probe",
+        row["probe_admitted"], row["probe_delivered"])
+    bound = row["max_fleet_tiles"] * row["widen_factor"]
+    assert row["peak_fleet_tiles"] <= bound, (
+        "fleet depth exceeded the edge bound — shedding engaged too late",
+        row["peak_fleet_tiles"], bound)
+    assert row["n_shed"] + row["n_edge_queued"] >= 1, (
+        "the overload probe saturated the edge but it never shed or "
+        "parked", row)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

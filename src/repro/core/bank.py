@@ -393,11 +393,17 @@ class ContextBank:
         return (self.op, self.src_a, self.src_b, self.imm)
 
     def stats(self) -> dict:
+        # occupancy / pinned_fraction are the bank-saturation signals the
+        # serving gateway's edge-shed heuristics read: a bank whose slots
+        # are mostly pinned is backed up behind in-flight rounds, so
+        # pushing more depth at it buys latency, not throughput
         return {"capacity": self.capacity, "resident": len(self),
                 "free": len(self._free), "loads": self.n_loads,
                 "evictions": self.n_evictions, "hits": self.n_hits,
                 "pinned": self.n_pinned, "generation": self.generation,
-                "ctx_cache": len(self._ctx_cache)}
+                "ctx_cache": len(self._ctx_cache),
+                "occupancy": len(self) / self.capacity,
+                "pinned_fraction": self.n_pinned / self.capacity}
 
 
 # ================================================================ directory

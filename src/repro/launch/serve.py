@@ -73,7 +73,44 @@ __all__ = [
     "AdmissionControl", "AdmissionError", "AutoPump", "DEFAULT_TENANT",
     "DeficitRoundRobin", "OverlayRequest", "OverlayServer",
     "ShardedOverlayServer", "TokenBucket", "main", "overlay_demo",
+    "tenant_latency_summary",
 ]
+
+
+#: latency percentiles reported by ``latency_percentiles`` and the
+#: per-tenant ``stats()["tenant_latency"]`` tables
+LATENCY_QS = (50, 95, 99)
+
+
+def tenant_latency_summary(samples, qs=LATENCY_QS,
+                           slo_s: float | None = None) -> dict:
+    """Per-tenant latency percentiles + SLO-attainment from raw samples.
+
+    ``samples`` is an iterable of ``(tenant, latency_seconds)`` pairs —
+    both engines feed it from their existing per-ticket records, and the
+    gateway's shed decisions and the benchmark tables read the SAME
+    summary, so there is one source of truth for "how is tenant X doing".
+    Returns ``{tenant: {p50, p95, p99, mean, n[, slo_attained, slo_total,
+    slo_attainment]}}``; the SLO fields appear only when ``slo_s`` is set
+    (a delivery-latency target in seconds — attained means
+    ``latency <= slo_s``).
+    """
+    by_tenant: dict[str, list] = {}
+    for tenant, lat in samples:
+        by_tenant.setdefault(tenant, []).append(lat)
+    out: dict[str, dict] = {}
+    for tenant in sorted(by_tenant):
+        lats = by_tenant[tenant]
+        row = {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+        row["mean"] = float(np.mean(lats))
+        row["n"] = len(lats)
+        if slo_s is not None:
+            attained = sum(1 for lat in lats if lat <= slo_s)
+            row["slo_attained"] = attained
+            row["slo_total"] = len(lats)
+            row["slo_attainment"] = attained / len(lats)
+        out[tenant] = row
+    return out
 
 
 @dataclasses.dataclass
@@ -123,9 +160,13 @@ class OverlayServer:
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
                  clock=time.monotonic, metrics_window: int = 65536,
-                 device=None):
+                 device=None, slo_s: float | None = None):
         from repro.core.bank import ContextBank
         from repro.core.overlay import Overlay
+        #: delivery-latency SLO target in seconds (None = no SLO
+        #: accounting); drives the slo_attained/slo_total counters in
+        #: ``tenant_latency_percentiles`` and ``stats()``
+        self.slo_s = slo_s
         #: device this server's bank + rounds are pinned to (None = default
         #: placement); set by ShardedOverlayServer, one device per replica
         self.device = device
@@ -499,11 +540,24 @@ class OverlayServer:
                 for t, rec in self._records.items()
                 if rec["t_done"] is not None}
 
-    def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+    def latency_percentiles(self, qs=LATENCY_QS) -> dict[str, float]:
         lats = list(self.latencies().values())
         if not lats:
             return {f"p{q}": float("nan") for q in qs}
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def tenant_latencies(self):
+        """Yield ``(tenant, latency_seconds)`` per delivered ticket."""
+        for rec in self._records.values():
+            if rec["t_done"] is not None:
+                yield rec["tenant"], rec["t_done"] - rec["t_submit"]
+
+    def tenant_latency_percentiles(self, qs=LATENCY_QS) -> dict:
+        """Per-tenant p50/p95/p99 + SLO attainment (see
+        :func:`tenant_latency_summary`); SLO fields appear when the
+        engine was built with ``slo_s``."""
+        return tenant_latency_summary(self.tenant_latencies(), qs=qs,
+                                      slo_s=self.slo_s)
 
     def record(self, ticket: int) -> dict:
         """Telemetry for one ticket (tenant, cost, submit/done, round)."""
@@ -526,7 +580,8 @@ class OverlayServer:
                   "pending": self.pending, "inflight": len(self._inflight),
                   "queued": self.queued, "queued_tiles": self.queued_tiles,
                   "tenants": len(self._flows),
-                  "round_policy": type(self.round_policy).__name__})
+                  "round_policy": type(self.round_policy).__name__,
+                  "tenant_latency": self.tenant_latency_percentiles()})
         return s
 
 
@@ -592,8 +647,12 @@ class ShardedOverlayServer:
                  clock=time.monotonic, metrics_window: int = 65536,
                  devices=None, migrate_factor: float = 4.0,
                  migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
-                 steal_min_tiles: int = 4, autoscaler=None):
+                 steal_min_tiles: int = 4, autoscaler=None,
+                 slo_s: float | None = None):
         from repro.launch.mesh import make_serving_mesh
+        #: fleet-wide delivery-latency SLO target (seconds); replicas
+        #: inherit it, so per-tenant SLO attainment aggregates cleanly
+        self.slo_s = slo_s
         #: candidate devices for replica placement — the pool elastic
         #: scale-ups draw from (add_replica picks its least-shared member)
         self._device_pool = (list(devices) if devices is not None
@@ -617,7 +676,7 @@ class ShardedOverlayServer:
             s_max=s_max, dtype=dtype, max_outputs=max_outputs,
             max_inflight=max_inflight, round_kernels=round_kernels,
             quantum_tiles=quantum_tiles, clock=clock,
-            metrics_window=metrics_window)
+            metrics_window=metrics_window, slo_s=slo_s)
         self.replicas = [
             OverlayServer(round_policy=_policy_for_replica(), device=d,
                           **self._replica_kw)
@@ -929,6 +988,13 @@ class ShardedOverlayServer:
     def pending(self) -> int:
         return sum(rep.pending for rep in self.replicas)
 
+    @property
+    def pending_tiles(self) -> int:
+        """Fleet-wide undelivered work in dispatch tiles — the gateway's
+        edge-backpressure signal (the depth its ``max_fleet_tiles`` bound
+        is enforced against)."""
+        return sum(rep.pending_tiles for rep in list(self.replicas))
+
     # -------------------------------------------------------------- retrieve
     def _to_global(self, rep: int, local_results: dict) -> dict:
         return {self._global[rep][loc]: ys
@@ -1118,11 +1184,29 @@ class ShardedOverlayServer:
                 out[t] = rec["t_done"] - rec["t_submit"]
         return out
 
-    def latency_percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+    def latency_percentiles(self, qs=LATENCY_QS) -> dict[str, float]:
         lats = list(self.latencies().values())
         if not lats:
             return {f"p{q}": float("nan") for q in qs}
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def tenant_latencies(self):
+        """Yield ``(tenant, latency_seconds)`` per delivered ticket,
+        fleet-wide: every live replica's records plus the orphan records
+        of tickets whose replica was decommissioned — a drained replica's
+        served traffic still counts against its tenants' SLOs."""
+        for rep in self.replicas:
+            yield from rep.tenant_latencies()
+        for rec in self._orphan_records.values():
+            if rec["t_done"] is not None:
+                yield rec["tenant"], rec["t_done"] - rec["t_submit"]
+
+    def tenant_latency_percentiles(self, qs=LATENCY_QS) -> dict:
+        """Fleet-wide per-tenant p50/p95/p99 + SLO attainment (one source
+        of truth shared by the gateway's shed decisions and the benchmark
+        tables — see :func:`tenant_latency_summary`)."""
+        return tenant_latency_summary(self.tenant_latencies(), qs=qs,
+                                      slo_s=self.slo_s)
 
     def reset_metrics(self) -> None:
         """Drop delivered-ticket telemetry AND routing counters (e.g.
@@ -1164,7 +1248,8 @@ class ShardedOverlayServer:
              "replicas_retired": self.n_replicas_retired,
              "retired_lifetime_s": self.retired_lifetime_s,
              "peak_replicas": self.peak_replicas,
-             "orphaned_results": len(self._orphaned)}
+             "orphaned_results": len(self._orphaned),
+             "tenant_latency": self.tenant_latency_percentiles()}
         s.update(self.router.stats())
         if self.autoscaler is not None:
             s.update(self.autoscaler.stats())

@@ -96,11 +96,27 @@ class AdmissionControl:
                                      else TokenBucket(*spec, clock=clock))
         self.default_admission = default_admission
         self._default_buckets: set[str] = set()
+        #: admission WINDOW: a multiplicative widening of every bucket,
+        #: applied at admit time (effective cost = cost / window).  The
+        #: serving gateway raises it above 1.0 while the autoscaler has a
+        #: scale-up pending — capacity is coming, so the edge may admit
+        #: more than steady-state rate — and reverts it to 1.0 when the
+        #: scale-up lands (see launch/gateway.py).  Bucket state is
+        #: untouched, so reverting is instant and carries no debt.
+        self.window = 1.0
+
+    def set_window(self, window: float) -> None:
+        """Set the admission window (1.0 = nominal; > 1 admits more)."""
+        if window <= 0:
+            raise ValueError(f"window must be > 0, got {window}")
+        self.window = float(window)
 
     def admit(self, tenant: str, cost: float) -> None:
         """Spend ``cost`` tokens from the tenant's bucket or raise
         :class:`AdmissionError`; tenants with no bucket (and no default
-        policy) are always admitted."""
+        policy) are always admitted.  ``cost`` is scaled by the current
+        admission ``window`` before it meets the bucket."""
+        cost = cost / self.window
         bucket = self._buckets.get(tenant)
         if bucket is None and self.default_admission is not None:
             bucket = TokenBucket(*self.default_admission, clock=self.clock)

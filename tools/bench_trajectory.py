@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Cross-PR benchmark trajectory: accumulate CI bench rows, gate regressions.
+
+CI's bench-smoke job writes one JSON row per serving study into
+``artifacts/bench/*.json`` (sharded / steal / autoscale / gateway) and
+uploads them as build artifacts — but artifacts evaporate with the run,
+so until now nothing compared one PR's throughput against the last.
+This tool closes that loop with a COMMITTED ledger:
+
+``append``
+    Read every ``artifacts/bench/*.json`` row, extract that benchmark's
+    headline throughput metric, and append an entry keyed by
+    ``(git sha, benchmark name)`` to ``BENCH_trajectory.json``.  The key
+    makes appends idempotent: re-running CI on the same sha updates the
+    sha's entry in place instead of duplicating it.
+
+``check``
+    For each benchmark present in the ledger, compare the NEWEST entry
+    against the previous entry from a DIFFERENT sha.  Exit non-zero if
+    throughput regressed more than ``--tolerance`` (default 15%) — the
+    CI gate.  Benchmarks with fewer than two shas pass vacuously (first
+    PR to add a lane seeds its own baseline).
+
+``show``
+    Print the per-benchmark trajectory as a table (sha, value, delta).
+
+The ledger only holds the slim headline metrics (throughput + a couple
+of shape fields), not the full rows — full rows stay in the per-run CI
+artifacts.  Keep ``BENCH_trajectory.json`` committed; CI appends on its
+checkout to run the gate, and the human lands the refreshed ledger with
+the PR (same model as a lockfile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_LEDGER = os.path.join(REPO, "BENCH_trajectory.json")
+DEFAULT_ARTIFACTS = os.path.join(REPO, "artifacts", "bench")
+
+#: benchmark name (artifact file stem) -> (headline throughput key,
+#: context keys copied alongside for reading the ledger without the run)
+METRICS = {
+    "sharded": ("sharded_rps", ("replicas", "devices", "speedup")),
+    "steal": ("steal_rps", ("replicas", "devices", "speedup")),
+    "autoscale": ("elastic_rps",
+                  ("max_replicas", "devices", "throughput_ratio",
+                   "idle_replica_slices_saved")),
+    "gateway": ("gateway_rps",
+                ("connections", "replicas", "n_shed", "n_edge_queued",
+                 "peak_fleet_tiles")),
+}
+
+
+def git_sha(short: bool = True) -> str:
+    cmd = ["git", "rev-parse"] + (["--short"] if short else []) + ["HEAD"]
+    out = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True,
+                         check=True)
+    return out.stdout.strip()
+
+
+def load_ledger(path: str) -> dict:
+    if not os.path.exists(path):
+        return {"benchmarks": {}}
+    with open(path) as f:
+        ledger = json.load(f)
+    ledger.setdefault("benchmarks", {})
+    return ledger
+
+
+def save_ledger(path: str, ledger: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(ledger, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def append(args) -> int:
+    ledger = load_ledger(args.ledger)
+    sha = args.sha or git_sha()
+    paths = sorted(glob.glob(os.path.join(args.artifacts, "*.json")))
+    if not paths:
+        print(f"bench_trajectory: no rows under {args.artifacts}; "
+              f"nothing to append", file=sys.stderr)
+        return 0 if args.allow_empty else 1
+    n = 0
+    for path in paths:
+        name = os.path.splitext(os.path.basename(path))[0]
+        if name not in METRICS:
+            print(f"  skip {name}: no metric mapping "
+                  f"(known: {sorted(METRICS)})")
+            continue
+        metric, extras = METRICS[name]
+        with open(path) as f:
+            row = json.load(f)
+        if metric not in row:
+            print(f"  skip {name}: row lacks {metric!r}", file=sys.stderr)
+            continue
+        entry = {"sha": sha, metric: row[metric]}
+        entry.update({k: row[k] for k in extras if k in row})
+        series = ledger["benchmarks"].setdefault(name, [])
+        # idempotent on sha: a CI re-run refreshes in place
+        series[:] = [e for e in series if e.get("sha") != sha]
+        series.append(entry)
+        n += 1
+        print(f"  append {name}@{sha}: {metric}={row[metric]:.1f}")
+    save_ledger(args.ledger, ledger)
+    print(f"bench_trajectory: {n} entr{'y' if n == 1 else 'ies'} "
+          f"-> {args.ledger}")
+    return 0
+
+
+def check(args) -> int:
+    ledger = load_ledger(args.ledger)
+    failures = []
+    for name, series in sorted(ledger["benchmarks"].items()):
+        if len(series) < 2:
+            print(f"  {name}: {len(series)} entry — baseline only, pass")
+            continue
+        metric, _ = METRICS.get(name, (None, ()))
+        cur = series[-1]
+        prev = next((e for e in reversed(series[:-1])
+                     if e.get("sha") != cur.get("sha")), None)
+        if prev is None:
+            print(f"  {name}: only one sha recorded, pass")
+            continue
+        if metric is None or metric not in cur or metric not in prev:
+            print(f"  {name}: metric missing, pass", file=sys.stderr)
+            continue
+        floor = prev[metric] * (1.0 - args.tolerance)
+        ok = cur[metric] >= floor
+        print(f"  {name}: {prev[metric]:.1f} ({prev['sha']}) -> "
+              f"{cur[metric]:.1f} ({cur['sha']}) "
+              f"[floor {floor:.1f}] {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"bench_trajectory: throughput regressed >"
+              f"{args.tolerance:.0%} on: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    print("bench_trajectory: no regressions beyond tolerance")
+    return 0
+
+
+def show(args) -> int:
+    ledger = load_ledger(args.ledger)
+    if not ledger["benchmarks"]:
+        print("bench_trajectory: ledger is empty")
+        return 0
+    for name, series in sorted(ledger["benchmarks"].items()):
+        metric, _ = METRICS.get(name, (None, ()))
+        print(f"{name} ({metric}):")
+        prev_v = None
+        for e in series:
+            v = e.get(metric)
+            delta = ("" if prev_v is None or v is None
+                     else f"  {(v / prev_v - 1.0):+.1%}")
+            print(f"  {e.get('sha', '?'):>12}  "
+                  f"{v if v is None else format(v, '.1f'):>10}{delta}")
+            prev_v = v if v is not None else prev_v
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ledger", default=DEFAULT_LEDGER,
+                    help="trajectory JSON path (committed)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    a = sub.add_parser("append", help="fold artifacts/bench rows in")
+    a.add_argument("--artifacts", default=DEFAULT_ARTIFACTS)
+    a.add_argument("--sha", default=None,
+                   help="override git sha (default: HEAD short sha)")
+    a.add_argument("--allow-empty", action="store_true",
+                   help="exit 0 when no artifact rows exist")
+    a.set_defaults(fn=append)
+
+    c = sub.add_parser("check", help="gate on throughput regressions")
+    c.add_argument("--tolerance", type=float, default=0.15,
+                   help="max allowed fractional drop vs previous sha")
+    c.set_defaults(fn=check)
+
+    s = sub.add_parser("show", help="print the trajectory")
+    s.set_defaults(fn=show)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
