@@ -1,0 +1,268 @@
+"""SLO scheduling study: per-flow quanta as SLO classes under contention.
+
+The paper's time-multiplexed functional units share one datapath across
+many logical operations; the serving analogue shares one round-forming
+engine across tenants with very different latency needs.  This study
+asks whether the scheduler's per-flow deficit quanta
+(``DeficitRoundRobin(tenant_quanta=...)``) can carve real SLO classes
+out of one contended engine:
+
+- a LATENCY tier (``lat0``, ``lat1``): small requests, a large per-flow
+  quantum (the whole backlog clears into the next round or two), and a
+  tight delivery SLO;
+- a preemptible BULK tier (``bulk0``, ``bulk1``): bigger requests, more
+  of them, a small quantum (the backlog trickles through without
+  crowding the rounds), and a loose SLO.
+
+The sweep crosses the base DRR ``quantum_tiles`` with the latency
+tier's quantum multiplier (1x = flat/no classes, the control arm) and
+adds ``DynamicTilePolicy`` AIMD round-budget targets on top of the
+tiered quanta.  Every configuration serves the SAME interleaved
+workload; SLO targets are calibrated from the flat control arm's wall
+(so attainment measures scheduling, not machine speed).  Per-config
+rows stream to ``--jsonl`` (one JSON line each); ``--json`` gets the
+summary row for the bench trajectory ledger (headline:
+``slo_attainment`` percent, best config).
+
+Asserted: under the best tiered config the latency tier's p99 beats
+the bulk tier's p99 (x ``--tolerance``), and beats its own p99 under
+the flat control arm — the quanta, not luck, buy the tier its SLO.
+
+Run: PYTHONPATH=src python -m benchmarks.slo_study [--smoke] \
+         [--json artifacts/bench/slo.json] \
+         [--jsonl artifacts/bench/slo_configs.jsonl]
+Reading the output: docs/TELEMETRY.md#reading-the-slo-study.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.launch.serve import OverlayServer, tenant_latency_summary
+from repro.sched import DeficitRoundRobin, DynamicTilePolicy
+
+LAT_TENANTS = ("lat0", "lat1")
+BULK_TENANTS = ("bulk0", "bulk1")
+LAT_BATCH = 64
+BULK_BATCH = 256
+#: SLO targets as fractions of the flat control arm's drain wall: the
+#: latency tier must clear well before a fair-share drain would finish
+#: (tight enough that the FLAT arm misses it — attainment has to be
+#: bought by the quanta); the bulk tier only has to finish within a
+#: relaxed envelope
+LAT_SLO_FRACTION = 0.4
+BULK_SLO_FRACTION = 1.5
+#: timed repetitions per config; percentiles use the median rep
+REPS = 3
+
+
+def _workload(kernels, lat_per_tenant, bulk_per_tenant, seed=0):
+    """Interleaved contention mix: every latency-tier request queues
+    behind bulk traffic unless the scheduler's quanta intervene.
+
+    Each tenant streams ONE dedicated kernel.  That keeps every round's
+    distinct-kernel budget (``round_kernels``) shared across tiers, so
+    both tiers are serviced in (almost) every round and the per-flow
+    quantum — not kernel-slot luck — decides each tier's share.  Bulk
+    requests are bigger (more dispatch tiles) and more numerous, so the
+    drain is many rounds deep: the contention the latency tier's SLO
+    has to survive.
+    """
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    tenant_kernel = {t: names[i % len(names)]
+                     for i, t in enumerate(BULK_TENANTS + LAT_TENANTS)}
+    plan = []
+    n = max(lat_per_tenant, bulk_per_tenant)
+    for j in range(n):
+        for tenant in BULK_TENANTS:
+            if j < bulk_per_tenant:
+                k = kernels[tenant_kernel[tenant]]
+                xs = [rng.uniform(-2, 2, (BULK_BATCH,)).astype(np.float32)
+                      for _ in k.dfg.inputs]
+                plan.append((tenant, k, xs))
+        for tenant in LAT_TENANTS:
+            if j < lat_per_tenant:
+                k = kernels[tenant_kernel[tenant]]
+                xs = [rng.uniform(-2, 2, (LAT_BATCH,)).astype(np.float32)
+                      for _ in k.dfg.inputs]
+                plan.append((tenant, k, xs))
+    return plan
+
+
+def _policy(cfg):
+    quanta = {t: cfg["quantum_tiles"] * cfg["lat_quantum_mult"]
+              for t in LAT_TENANTS}
+    if cfg["policy"] == "dynamic":
+        return DynamicTilePolicy(quantum_tiles=cfg["quantum_tiles"],
+                                 target_latency_s=cfg["target_latency_s"],
+                                 tenant_quanta=quanta)
+    return DeficitRoundRobin(quantum_tiles=cfg["quantum_tiles"],
+                             tenant_quanta=quanta)
+
+
+def _tier(tenant):
+    return "latency" if tenant.startswith("lat") else "bulk"
+
+
+def run_config(cfg, kernels, workload):
+    """Serve the workload under one scheduler config; returns the row.
+
+    One warmup drain (compiles + residency), then ``REPS`` timed drains;
+    latency samples pool across timed reps (median-rep behaviour without
+    single-rep noise), pooled BY TIER for the headline percentiles.
+    """
+    srv = OverlayServer(bank_capacity=len(kernels), round_kernels=2,
+                        max_inflight=2, round_policy=_policy(cfg))
+    for tenant, k, xs in workload:          # warmup: compile the buckets
+        srv.submit(k, xs, tenant=tenant)
+    srv.flush()
+    srv.reset_metrics()
+    walls, samples = [], []
+    for _rep in range(REPS):
+        srv.reset_metrics()
+        for tenant, k, xs in workload:
+            srv.submit(k, xs, tenant=tenant)
+        t0 = time.perf_counter()
+        results = srv.flush()
+        jax.block_until_ready([y for ys in results.values() for y in ys])
+        walls.append(time.perf_counter() - t0)
+        samples.extend(srv.tenant_latencies())
+    tiered = tenant_latency_summary(
+        ((_tier(t), lat) for t, lat in samples),
+        slo_s={"latency": cfg["lat_slo_s"], "bulk": cfg["bulk_slo_s"]})
+    lat, bulk = tiered["latency"], tiered["bulk"]
+    attained = lat["slo_attained"] + bulk["slo_attained"]
+    total = lat["slo_total"] + bulk["slo_total"]
+    return {
+        **{k: v for k, v in cfg.items()},
+        "wall_s": float(np.median(walls)),
+        "rounds_per_drain": srv.n_rounds // (REPS + 1),
+        "latency_p50_ms": lat["p50"] * 1e3,
+        "latency_p99_ms": lat["p99"] * 1e3,
+        "bulk_p99_ms": bulk["p99"] * 1e3,
+        "latency_slo_attainment": lat["slo_attainment"],
+        "bulk_slo_attainment": bulk["slo_attainment"],
+        "slo_attainment": 100.0 * attained / total,
+        "requests_per_drain": len(workload),
+    }
+
+
+def sweep_configs(smoke):
+    """The config grid; the FIRST entry is the flat control arm (no SLO
+    classes) — its wall calibrates every config's SLO targets and its
+    latency p99 is the bar the tiered arms must beat."""
+    if smoke:
+        grid = [("drr", 2.0, 1.0, None),
+                ("drr", 2.0, 16.0, None),
+                ("dynamic", 2.0, 16.0, 0.1)]
+    else:
+        grid = [("drr", 2.0, 1.0, None)]
+        for q in (2.0, 4.0):
+            for mult in (8.0, 16.0):
+                grid.append(("drr", q, mult, None))
+        for tgt in (0.05, 0.2):
+            grid.append(("dynamic", 2.0, 16.0, tgt))
+    return [{"policy": p, "quantum_tiles": q, "lat_quantum_mult": m,
+             "target_latency_s": t} for p, q, m, t in grid]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + 3-config sweep for CI")
+    ap.add_argument("--tolerance", type=float, default=1.0,
+                    help="win-assertion slack on noisy shared runners")
+    ap.add_argument("--json", default=None,
+                    help="dump the summary row (best config) to this path")
+    ap.add_argument("--jsonl", default=None,
+                    help="stream one JSON line per swept config here")
+    args = ap.parse_args(argv)
+    kernels = {n: compile_program(benchmark(n))
+               for n in BENCH_NAMES + ("gradient",)}
+    lat_n, bulk_n = (8, 16) if args.smoke else (12, 24)
+    workload = _workload(kernels, lat_n, bulk_n)
+    configs = sweep_configs(args.smoke)
+
+    # calibrate SLO targets from the flat control arm's wall, then
+    # re-run every config (control included) against those fixed targets
+    cal = dict(configs[0], lat_slo_s=float("inf"), bulk_slo_s=float("inf"))
+    flat_wall = run_config(cal, kernels, workload)["wall_s"]
+    lat_slo = flat_wall * LAT_SLO_FRACTION
+    bulk_slo = flat_wall * BULK_SLO_FRACTION
+    print(f"# SLO targets calibrated from flat-arm wall {flat_wall:.4f}s: "
+          f"latency tier {lat_slo * 1e3:.1f}ms, "
+          f"bulk tier {bulk_slo * 1e3:.1f}ms")
+
+    jsonl_f = None
+    if args.jsonl:
+        os.makedirs(os.path.dirname(args.jsonl) or ".", exist_ok=True)
+        jsonl_f = open(args.jsonl, "w")
+    rows = []
+    print("policy,quantum_tiles,lat_quantum,target_latency_s,wall_s,"
+          "lat_p99_ms,bulk_p99_ms,lat_slo_att,bulk_slo_att,slo_attainment")
+    for cfg in configs:
+        row = run_config(dict(cfg, lat_slo_s=lat_slo, bulk_slo_s=bulk_slo),
+                         kernels, workload)
+        rows.append(row)
+        print(f"{row['policy']},{row['quantum_tiles']:.0f},"
+              f"{row['lat_quantum_mult']:.0f},{row['target_latency_s']},"
+              f"{row['wall_s']:.4f},{row['latency_p99_ms']:.2f},"
+              f"{row['bulk_p99_ms']:.2f},{row['latency_slo_attainment']:.2f},"
+              f"{row['bulk_slo_attainment']:.2f},{row['slo_attainment']:.1f}")
+        if jsonl_f:
+            jsonl_f.write(json.dumps(row, sort_keys=True) + "\n")
+            jsonl_f.flush()
+    if jsonl_f:
+        jsonl_f.close()
+        print(f"# wrote {len(rows)} config rows to {args.jsonl}")
+
+    flat = rows[0]
+    tiered = [r for r in rows[1:] if r["lat_quantum_mult"] > 1.0]
+    best = max(tiered, key=lambda r: (r["slo_attainment"],
+                                      -r["latency_p99_ms"]))
+    summary = {
+        "slo_attainment": best["slo_attainment"],
+        "latency_p99_ms": best["latency_p99_ms"],
+        "bulk_p99_ms": best["bulk_p99_ms"],
+        "flat_latency_p99_ms": flat["latency_p99_ms"],
+        "flat_slo_attainment": flat["slo_attainment"],
+        "policy": best["policy"],
+        "quantum_tiles": best["quantum_tiles"],
+        "lat_quantum": best["lat_quantum_mult"],
+        "lat_slo_ms": lat_slo * 1e3,
+        "bulk_slo_ms": bulk_slo * 1e3,
+        "configs": len(rows),
+        "requests_per_drain": len(workload),
+    }
+    print(f"# best tiered config: {best['policy']} "
+          f"quantum={best['quantum_tiles']:.0f} "
+          f"lat_quantum={best['lat_quantum_mult']:.0f}x -> "
+          f"slo_attainment {best['slo_attainment']:.1f}% "
+          f"(flat control {flat['slo_attainment']:.1f}%); latency-tier "
+          f"p99 {best['latency_p99_ms']:.2f}ms vs bulk "
+          f"{best['bulk_p99_ms']:.2f}ms "
+          f"({best['bulk_p99_ms'] / best['latency_p99_ms']:.1f}x) vs flat "
+          f"latency p99 {flat['latency_p99_ms']:.2f}ms")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"# wrote {args.json}")
+    assert best["latency_p99_ms"] < best["bulk_p99_ms"] * args.tolerance, (
+        "latency tier's p99 did not beat the bulk tier's under contention",
+        best["latency_p99_ms"], best["bulk_p99_ms"], args.tolerance)
+    assert (best["latency_p99_ms"]
+            < flat["latency_p99_ms"] * args.tolerance), (
+        "tiered quanta did not improve the latency tier over the flat arm",
+        best["latency_p99_ms"], flat["latency_p99_ms"], args.tolerance)
+
+
+if __name__ == "__main__":
+    main()

@@ -152,7 +152,8 @@ class OverlayGateway:
                  max_edge_waiters: int = 4096,
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
-                 poll_interval: float = 0.002, clock=time.monotonic):
+                 poll_interval: float = 0.002, clock=time.monotonic,
+                 telemetry=None):
         if overflow not in ("wait", "shed"):
             raise ValueError(
                 f"overflow must be 'wait' or 'shed', got {overflow!r}")
@@ -199,16 +200,61 @@ class OverlayGateway:
         #: waiters (pump.submit would block the event loop on the pump
         #: lock the drain holds)
         self._draining = False
-        # edge telemetry
-        self.n_submitted = 0
-        self.n_shed = 0
-        self.n_edge_queued = 0
-        self.n_reclaimed = 0
-        self.n_connects = 0
-        self.n_disconnects = 0
-        self.peak_fleet_tiles = 0
-        self.peak_edge_waiters = 0
-        self.n_widened_ticks = 0
+        # edge telemetry: every counter lives in the structured sink —
+        # by default the pump's (= the wrapped engine's), so the edge,
+        # the pump, and the fleet tell one story through one store
+        from repro.telemetry import InMemorySink
+        self.telemetry = (telemetry if telemetry is not None
+                          else getattr(self._pump, "telemetry", None)
+                          or InMemorySink(clock=clock))
+
+    # ------------------------------------------------- counters (read-through)
+    @property
+    def n_attempts(self) -> int:
+        """Submits that passed per-connection admission (parked or not)."""
+        return int(self.telemetry.counter("edge.attempts"))
+
+    @property
+    def n_submitted(self) -> int:
+        return int(self.telemetry.counter("edge.submitted"))
+
+    @property
+    def n_shed(self) -> int:
+        return int(self.telemetry.counter("edge.shed"))
+
+    @property
+    def n_edge_queued(self) -> int:
+        return int(self.telemetry.counter("edge.queued"))
+
+    @property
+    def n_park_cancelled(self) -> int:
+        """Parked submits that never reached the fleet (connection or
+        gateway closed, or the awaiting task cancelled, while queued)."""
+        return int(self.telemetry.counter("edge.park_cancelled"))
+
+    @property
+    def n_reclaimed(self) -> int:
+        return int(self.telemetry.counter("edge.reclaimed"))
+
+    @property
+    def n_connects(self) -> int:
+        return int(self.telemetry.counter("edge.connects"))
+
+    @property
+    def n_disconnects(self) -> int:
+        return int(self.telemetry.counter("edge.disconnects"))
+
+    @property
+    def peak_fleet_tiles(self) -> int:
+        return int(self.telemetry.counter("edge.peak_fleet_tiles"))
+
+    @property
+    def peak_edge_waiters(self) -> int:
+        return int(self.telemetry.counter("edge.peak_edge_waiters"))
+
+    @property
+    def n_widened_ticks(self) -> int:
+        return int(self.telemetry.counter("edge.widened_ticks"))
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -282,7 +328,8 @@ class OverlayGateway:
             admission=AdmissionControl(admission, default,
                                        clock=self.clock))
         self._connections.add(conn)
-        self.n_connects += 1
+        self.telemetry.inc("edge.connects")
+        self.telemetry.event("connect", tenant=tenant, session=session)
         return conn
 
     async def aclose(self) -> None:
@@ -300,6 +347,7 @@ class OverlayGateway:
         while self._edge_waiters:
             w = self._edge_waiters.popleft()
             if not w.future.done():
+                self.telemetry.inc("edge.park_cancelled")
                 w.future.set_exception(
                     GatewayClosedError("gateway closed while queued at "
                                        "the edge"))
@@ -347,7 +395,7 @@ class OverlayGateway:
 
     def _has_capacity(self, cost: int) -> bool:
         depth = self.fleet_pending_tiles
-        self.peak_fleet_tiles = max(self.peak_fleet_tiles, depth)
+        self.telemetry.peak("edge.peak_fleet_tiles", depth)
         return depth + cost <= self._edge_bound()
 
     # ---------------------------------------------------------- pump bridge
@@ -373,7 +421,7 @@ class OverlayGateway:
             return
         window = self.window
         if window != 1.0:
-            self.n_widened_ticks += 1
+            self.telemetry.inc("edge.widened_ticks")
         for conn in self._connections:
             conn.admission.set_window(window)
         self._resolve_delivered()
@@ -392,9 +440,11 @@ class OverlayGateway:
             w = self._edge_waiters[0]
             if w.future.done():         # cancelled while parked
                 self._edge_waiters.popleft()
+                self.telemetry.inc("edge.park_cancelled")
                 continue
             if w.conn.closed:           # dropped while parked: never
                 self._edge_waiters.popleft()    # reached the fleet
+                self.telemetry.inc("edge.park_cancelled")
                 w.future.set_exception(GatewayClosedError(
                     "connection closed while queued at the edge"))
                 continue
@@ -404,6 +454,7 @@ class OverlayGateway:
             try:
                 ticket = self._fleet_submit(w.conn, w.kernel, w.xs)
             except Exception as e:      # fleet-side admission, bank, ...
+                self.telemetry.inc("edge.submit_errors")
                 w.future.set_exception(e)
                 continue
             w.future.set_result(ticket)
@@ -416,9 +467,9 @@ class OverlayGateway:
         ticket = self._pump.submit(kernel, xs, tenant=conn.tenant)
         self._outstanding[ticket] = conn
         conn._register(ticket)
-        self.n_submitted += 1
-        depth = self.fleet_pending_tiles
-        self.peak_fleet_tiles = max(self.peak_fleet_tiles, depth)
+        self.telemetry.inc("edge.submitted")
+        self.telemetry.peak("edge.peak_fleet_tiles",
+                            self.fleet_pending_tiles)
         return ticket
 
     async def _submit(self, conn: "GatewayConnection", kernel, xs) -> int:
@@ -429,10 +480,13 @@ class OverlayGateway:
         # per-connection admission first: a rate-limited tenant is
         # rejected before it can occupy edge-queue slots
         conn.admission.admit(conn.tenant, cost)
+        self.telemetry.inc("edge.attempts")
         if self._edge_waiters or not self._has_capacity(cost):
             if (self.overflow == "shed"
                     or len(self._edge_waiters) >= self.max_edge_waiters):
-                self.n_shed += 1
+                self.telemetry.inc("edge.shed")
+                self.telemetry.event("shed", tenant=conn.tenant, cost=cost,
+                                     depth=self.fleet_pending_tiles)
                 raise GatewayOverloadedError(
                     f"fleet depth {self.fleet_pending_tiles} + {cost} "
                     f"tiles exceeds edge bound {self._edge_bound():.0f} "
@@ -442,16 +496,18 @@ class OverlayGateway:
                 future=asyncio.get_running_loop().create_future(),
                 conn=conn, kernel=kernel, xs=xs, cost=cost)
             self._edge_waiters.append(waiter)
-            self.n_edge_queued += 1
-            self.peak_edge_waiters = max(self.peak_edge_waiters,
-                                         len(self._edge_waiters))
+            self.telemetry.inc("edge.queued")
+            self.telemetry.peak("edge.peak_edge_waiters",
+                                len(self._edge_waiters))
             try:
                 return await waiter.future
             except asyncio.CancelledError:
                 try:
                     self._edge_waiters.remove(waiter)
                 except ValueError:
-                    pass
+                    pass        # a tick already popped (and counted) it
+                else:
+                    self.telemetry.inc("edge.park_cancelled")
                 raise
         return self._fleet_submit(conn, kernel, xs)
 
@@ -524,9 +580,11 @@ class OverlayGateway:
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:
         """Edge telemetry + the wrapped engine's stats (one dict)."""
-        s = {"edge_submitted": self.n_submitted,
+        s = {"edge_attempts": self.n_attempts,
+             "edge_submitted": self.n_submitted,
              "edge_shed": self.n_shed,
              "edge_queued": self.n_edge_queued,
+             "edge_park_cancelled": self.n_park_cancelled,
              "edge_waiters": len(self._edge_waiters),
              "peak_edge_waiters": self.peak_edge_waiters,
              "peak_fleet_tiles": self.peak_fleet_tiles,
@@ -670,7 +728,9 @@ class GatewayConnection:
             gw._resolve_delivered()
         for t in waiting:
             out[t] = await self.result(t)
-        gw.n_reclaimed += len(out)
+        gw.telemetry.inc("edge.reclaimed", len(out))
+        gw.telemetry.event("reclaim", session=self.session,
+                           tickets=len(out))
         return out
 
     @property
@@ -688,7 +748,7 @@ class GatewayConnection:
         self.closed = True
         gw = self.gateway
         gw._connections.discard(self)
-        gw.n_disconnects += 1
+        gw.telemetry.inc("edge.disconnects")
         undelivered = set(self._futures)
         for t, fut in self._futures.items():
             if not fut.done():

@@ -68,6 +68,7 @@ from repro.sched import (AdmissionControl, AdmissionError, AutoPump,
                          DeficitRoundRobin, Flow, OverlayRequest,
                          TokenBucket, make_round_policy, make_router)
 from repro.sched.rounds import DEFAULT_TENANT
+from repro.telemetry import InMemorySink, MultiSink, adopt_counters
 
 __all__ = [
     "AdmissionControl", "AdmissionError", "AutoPump", "DEFAULT_TENANT",
@@ -82,8 +83,7 @@ __all__ = [
 LATENCY_QS = (50, 95, 99)
 
 
-def tenant_latency_summary(samples, qs=LATENCY_QS,
-                           slo_s: float | None = None) -> dict:
+def tenant_latency_summary(samples, qs=LATENCY_QS, slo_s=None) -> dict:
     """Per-tenant latency percentiles + SLO-attainment from raw samples.
 
     ``samples`` is an iterable of ``(tenant, latency_seconds)`` pairs —
@@ -91,9 +91,13 @@ def tenant_latency_summary(samples, qs=LATENCY_QS,
     gateway's shed decisions and the benchmark tables read the SAME
     summary, so there is one source of truth for "how is tenant X doing".
     Returns ``{tenant: {p50, p95, p99, mean, n[, slo_attained, slo_total,
-    slo_attainment]}}``; the SLO fields appear only when ``slo_s`` is set
-    (a delivery-latency target in seconds — attained means
-    ``latency <= slo_s``).
+    slo_attainment]}}``.
+
+    ``slo_s`` is a delivery-latency target in seconds — attained means
+    ``latency <= slo_s``.  A float applies the same target to every
+    tenant; a ``{tenant: seconds}`` dict sets per-tenant SLO classes
+    (the slo_study's latency vs bulk tiers) and tenants absent from the
+    dict get no SLO fields; None disables SLO accounting entirely.
     """
     by_tenant: dict[str, list] = {}
     for tenant, lat in samples:
@@ -104,8 +108,9 @@ def tenant_latency_summary(samples, qs=LATENCY_QS,
         row = {f"p{q}": float(np.percentile(lats, q)) for q in qs}
         row["mean"] = float(np.mean(lats))
         row["n"] = len(lats)
-        if slo_s is not None:
-            attained = sum(1 for lat in lats if lat <= slo_s)
+        slo = slo_s.get(tenant) if isinstance(slo_s, dict) else slo_s
+        if slo is not None:
+            attained = sum(1 for lat in lats if lat <= slo)
             row["slo_attained"] = attained
             row["slo_total"] = len(lats)
             row["slo_attainment"] = attained / len(lats)
@@ -160,13 +165,23 @@ class OverlayServer:
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
                  clock=time.monotonic, metrics_window: int = 65536,
-                 device=None, slo_s: float | None = None):
+                 device=None, slo_s=None, telemetry=None):
         from repro.core.bank import ContextBank
         from repro.core.overlay import Overlay
         #: delivery-latency SLO target in seconds (None = no SLO
-        #: accounting); drives the slo_attained/slo_total counters in
+        #: accounting); a float applies to every tenant, a
+        #: ``{tenant: seconds}`` dict sets per-tenant targets (tenants
+        #: absent from the dict get no SLO fields).  Drives the
+        #: slo_attained/slo_total counters in
         #: ``tenant_latency_percentiles`` and ``stats()``
         self.slo_s = slo_s
+        #: the structured telemetry sink (see repro.telemetry) every
+        #: engine counter and delivery event flows through; ``stats()``
+        #: and the ``n_rounds``/``n_requests``/``n_submits`` properties
+        #: are read-throughs over it.  A ShardedOverlayServer hands each
+        #: replica ``MultiSink(own, fleet_sink)``.
+        self.telemetry = (telemetry if telemetry is not None
+                          else InMemorySink(clock=clock))
         #: device this server's bank + rounds are pinned to (None = default
         #: placement); set by ShardedOverlayServer, one device per replica
         self.device = device
@@ -222,8 +237,22 @@ class OverlayServer:
         self._claimed: deque[int] = deque()
         self._next_ticket = 0
         self._pending_tiles = 0
-        self.n_rounds = 0
-        self.n_requests = 0
+
+    # ------------------------------------------------- counters (read-through)
+    @property
+    def n_submits(self) -> int:
+        """Requests accepted by ``submit`` (admission-rejected excluded)."""
+        return int(self.telemetry.counter("engine.submits"))
+
+    @property
+    def n_rounds(self) -> int:
+        """Rounds launched (streaming and sync paths both count)."""
+        return int(self.telemetry.counter("engine.rounds"))
+
+    @property
+    def n_requests(self) -> int:
+        """Requests delivered to the done-store (claimed or not)."""
+        return int(self.telemetry.counter("engine.delivered"))
 
     # ----------------------------------------------------------------- queue
     def submit(self, kernel, xs, tenant: str = DEFAULT_TENANT) -> int:
@@ -244,6 +273,7 @@ class OverlayServer:
         self._enqueue(req)
         self._records[t] = {"tenant": tenant, "t_submit": req.t_submit,
                             "cost": cost, "t_done": None, "round": None}
+        self.telemetry.inc("engine.submits")
         return t
 
     def _enqueue(self, req: OverlayRequest) -> None:
@@ -372,10 +402,10 @@ class OverlayServer:
                 self._retire_oldest()
         batch = self.overlay.assemble(plan)
         ys = self.overlay.execute(self.bank, batch)
+        round_no = int(self.telemetry.inc("engine.rounds")) - 1
         self._inflight.append(_Inflight(reqs=reqs, plan=plan, ys=ys,
-                                        round_no=self.n_rounds,
+                                        round_no=round_no,
                                         t_launch=self.clock()))
-        self.n_rounds += 1
 
     def _retire_oldest(self) -> list:
         """Deliver the oldest in-flight round; returns its tickets."""
@@ -393,10 +423,16 @@ class OverlayServer:
             rec["t_done"] = now
             rec["round"] = inf.round_no
             tickets.append(r.ticket)
+            self.telemetry.event("deliver", tenant=r.tenant, cost=r.cost,
+                                 round=inf.round_no,
+                                 latency_s=now - rec["t_submit"])
         inf.plan.release(self.bank)
         round_cost = sum(r.cost for r in inf.reqs)
         self._pending_tiles -= round_cost
-        self.n_requests += len(inf.reqs)
+        self.telemetry.inc("engine.delivered", len(inf.reqs))
+        self.telemetry.log_step(inf.round_no, tiles=round_cost,
+                                requests=len(inf.reqs),
+                                wall_s=now - inf.t_launch)
         # feedback edge: adaptive policies size future rounds off this.
         # Units are per-request ceil tiles (r.cost) — the SAME units the
         # policies budget rounds in (and flush_sync reports), never the
@@ -519,15 +555,20 @@ class OverlayServer:
                 self.bank, [(r.kernel, r.xs) for r in reqs], tile=self.tile)
             jax.block_until_ready([y for ys in outs for y in ys])
             now = self.clock()
+            round_no = int(self.telemetry.inc("engine.rounds")) - 1
             for r, y in zip(reqs, outs):
                 results[r.ticket] = y
-                self._records[r.ticket].update(t_done=now,
-                                               round=self.n_rounds)
-            self.n_rounds += 1
-            self._pending_tiles -= sum(r.cost for r in reqs)
-            self.n_requests += len(reqs)
-            self.round_policy.observe(sum(r.cost for r in reqs),
-                                      now - t_launch)
+                self._records[r.ticket].update(t_done=now, round=round_no)
+                self.telemetry.event(
+                    "deliver", tenant=r.tenant, cost=r.cost, round=round_no,
+                    latency_s=now - self._records[r.ticket]["t_submit"])
+            round_cost = sum(r.cost for r in reqs)
+            self._pending_tiles -= round_cost
+            self.telemetry.inc("engine.delivered", len(reqs))
+            self.telemetry.log_step(round_no, tiles=round_cost,
+                                    requests=len(reqs),
+                                    wall_s=now - t_launch)
+            self.round_policy.observe(round_cost, now - t_launch)
         results.update(self._done)
         self._done.clear()
         self._note_claimed(results)
@@ -576,7 +617,8 @@ class OverlayServer:
 
     def stats(self) -> dict:
         s = dict(self.bank.stats())
-        s.update({"rounds": self.n_rounds, "requests": self.n_requests,
+        s.update({"submits": self.n_submits,
+                  "rounds": self.n_rounds, "requests": self.n_requests,
                   "pending": self.pending, "inflight": len(self._inflight),
                   "queued": self.queued, "queued_tiles": self.queued_tiles,
                   "tenants": len(self._flows),
@@ -648,11 +690,19 @@ class ShardedOverlayServer:
                  devices=None, migrate_factor: float = 4.0,
                  migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
                  steal_min_tiles: int = 4, autoscaler=None,
-                 slo_s: float | None = None):
+                 slo_s=None, telemetry=None):
         from repro.launch.mesh import make_serving_mesh
-        #: fleet-wide delivery-latency SLO target (seconds); replicas
-        #: inherit it, so per-tenant SLO attainment aggregates cleanly
+        #: fleet-wide delivery-latency SLO target (seconds, or a
+        #: ``{tenant: seconds}`` dict of SLO classes); replicas inherit
+        #: it, so per-tenant SLO attainment aggregates cleanly
         self.slo_s = slo_s
+        #: the fleet's shared telemetry sink: every replica writes
+        #: through ``MultiSink(own, this)``, so fleet aggregates (rounds,
+        #: deliveries, evictions) accumulate here across replicas that
+        #: have since been drained — no hand-folded ``_retired_*`` state.
+        #: The router and autoscaler are re-bound to it too.
+        self.telemetry = (telemetry if telemetry is not None
+                          else InMemorySink(clock=clock))
         #: candidate devices for replica placement — the pool elastic
         #: scale-ups draw from (add_replica picks its least-shared member)
         self._device_pool = (list(devices) if devices is not None
@@ -679,6 +729,7 @@ class ShardedOverlayServer:
             metrics_window=metrics_window, slo_s=slo_s)
         self.replicas = [
             OverlayServer(round_policy=_policy_for_replica(), device=d,
+                          telemetry=self._replica_sink(),
                           **self._replica_kw)
             for d in self.devices]
         #: the routing policy (see repro.sched.routing); ``steal=True``
@@ -691,6 +742,15 @@ class ShardedOverlayServer:
         #: the fleet-sizing policy (see repro.sched.autoscale); None =
         #: static fleet.  Observed once per drain pass / pump tick.
         self.autoscaler = autoscaler
+        # re-bind the router's and autoscaler's sinks onto the fleet's,
+        # carrying over anything they counted pre-binding, so one sink
+        # holds the whole serving story (guarded: the protocols don't
+        # require a telemetry attribute of custom policies)
+        for part in (self.router, self.autoscaler):
+            sink = getattr(part, "telemetry", None)
+            if sink is not None and sink is not self.telemetry:
+                adopt_counters(self.telemetry, sink)
+                part.telemetry = self.telemetry
         self.admission = AdmissionControl(admission, default_admission,
                                           clock=clock)
         self.clock = clock
@@ -706,23 +766,51 @@ class ShardedOverlayServer:
         self._claimed: deque[int] = deque()
         self._next_ticket = 0
         self._rr = 0                                   # retire fan-in ptr
-        self.n_submits = 0
         # elastic-fleet telemetry
         self._born = [self.clock() for _ in self.replicas]
         #: high-water fleet size since construction (benchmarks reset it
         #: per measurement window to integrate capacity over time)
         self.peak_replicas = len(self.replicas)
-        self.n_scale_ups = 0
-        self.n_scale_downs = 0
-        self.n_evacuated_requests = 0
-        self.n_evacuated_tiles = 0
-        self.n_replicas_retired = 0
-        self.retired_lifetime_s = 0.0
-        # work served by since-retired replicas (stats() folds these into
-        # the fleet aggregates, which otherwise sum live replicas only)
-        self._retired_rounds = 0
-        self._retired_requests = 0
-        self._retired_evictions = 0
+
+    def _replica_sink(self):
+        """A fresh replica's sink: its own store fanned into the fleet's.
+
+        Reads (per-replica ``stats()``) come from the replica's own
+        store; every write also lands in the shared fleet sink, which is
+        how rounds/deliveries/evictions served by since-retired replicas
+        stay in the fleet aggregates after ``drain_replica``.
+        """
+        return MultiSink(InMemorySink(clock=self._replica_kw["clock"]),
+                         self.telemetry)
+
+    # ------------------------------------------------- counters (read-through)
+    @property
+    def n_submits(self) -> int:
+        return int(self.telemetry.counter("fleet.submits"))
+
+    @property
+    def n_scale_ups(self) -> int:
+        return int(self.telemetry.counter("fleet.scale_ups"))
+
+    @property
+    def n_scale_downs(self) -> int:
+        return int(self.telemetry.counter("fleet.scale_downs"))
+
+    @property
+    def n_evacuated_requests(self) -> int:
+        return int(self.telemetry.counter("fleet.evacuated_requests"))
+
+    @property
+    def n_evacuated_tiles(self) -> int:
+        return int(self.telemetry.counter("fleet.evacuated_tiles"))
+
+    @property
+    def n_replicas_retired(self) -> int:
+        return int(self.telemetry.counter("fleet.replicas_retired"))
+
+    @property
+    def retired_lifetime_s(self) -> float:
+        return float(self.telemetry.counter("fleet.retired_lifetime_s"))
 
     @property
     def n_replicas(self) -> int:
@@ -814,13 +902,16 @@ class ShardedOverlayServer:
         if device is None:
             device = least_shared_device(self._device_pool, self.devices)
         rep = OverlayServer(round_policy=self._policy_factory(),
-                            device=device, **self._replica_kw)
+                            device=device, telemetry=self._replica_sink(),
+                            **self._replica_kw)
         self.replicas.append(rep)
         self.devices.append(device)
         self._global.append({})
         self._born.append(self.clock())
         self.peak_replicas = max(self.peak_replicas, len(self.replicas))
-        self.n_scale_ups += 1
+        self.telemetry.inc("fleet.scale_ups")
+        self.telemetry.event("scale_up", replica=len(self.replicas) - 1,
+                             device=str(device), fleet=len(self.replicas))
         return len(self.replicas) - 1
 
     def drain_replica(self, i: int) -> dict:
@@ -908,22 +999,27 @@ class ShardedOverlayServer:
             self._owner.pop(g, None)
         self.directory.remove_replica(i)
         rep.bank.retire()
-        # fold the dying replica's work counters into the fleet-level
-        # accumulators BEFORE it leaves: stats() sums live replicas, and
-        # a study that drains replicas mid-run must not undercount the
-        # rounds/requests/evictions they served
-        self._retired_rounds += rep.n_rounds
-        self._retired_requests += rep.n_requests
-        self._retired_evictions += rep.bank.n_evictions
+        # the replica's rounds/deliveries already live in the shared
+        # fleet sink (every replica writes through MultiSink(own, fleet))
+        # so fleet stats() keeps them for free; bank evictions are the
+        # one per-replica counter that does NOT flow through the engine
+        # sink — fold them here before the bank goes away
+        self.telemetry.inc("fleet.retired_evictions", rep.bank.n_evictions)
         self.replicas.pop(i)
         self.devices.pop(i)
         self._global.pop(i)
         lifetime = self.clock() - self._born.pop(i)
-        self.n_scale_downs += 1
-        self.n_replicas_retired += 1
-        self.retired_lifetime_s += lifetime
-        self.n_evacuated_requests += evac_requests
-        self.n_evacuated_tiles += evac_tiles
+        self.telemetry.inc("fleet.scale_downs")
+        self.telemetry.inc("fleet.replicas_retired")
+        self.telemetry.inc("fleet.retired_lifetime_s", lifetime)
+        self.telemetry.inc("fleet.evacuated_requests", evac_requests)
+        self.telemetry.inc("fleet.evacuated_tiles", evac_tiles)
+        self.telemetry.inc("fleet.orphaned_results", orphaned_now)
+        self.telemetry.event("scale_down", replica=i, lifetime_s=lifetime,
+                             evacuated_requests=evac_requests,
+                             evacuated_tiles=evac_tiles,
+                             orphaned_results=orphaned_now,
+                             fleet=len(self.replicas))
         self._owner = {t: ((r - 1, loc) if r > i else (r, loc))
                        for t, (r, loc) in self._owner.items()}
         return {"replica": i, "evacuated_requests": evac_requests,
@@ -981,7 +1077,7 @@ class ShardedOverlayServer:
         self._next_ticket += 1
         self._owner[t] = (rep, loc)
         self._global[rep][loc] = t
-        self.n_submits += 1
+        self.telemetry.inc("fleet.submits")
         return t
 
     @property
@@ -1012,6 +1108,7 @@ class ShardedOverlayServer:
             self._orphan_records.pop(ticket, None)
 
     def _note_claimed(self, tickets) -> None:
+        self.telemetry.inc("fleet.claims", len(tickets))
         self._claimed.extend(tickets)
         while len(self._claimed) > self.metrics_window:
             self._forget(self._claimed.popleft())
@@ -1021,6 +1118,7 @@ class ShardedOverlayServer:
         returns its outputs, raises KeyError if already claimed, or
         returns None when the ticket is not an orphan at all."""
         if ticket in self._orphaned:
+            self.telemetry.inc("fleet.orphan_claims")
             self._note_claimed([ticket])
             return self._orphaned.pop(ticket)
         if ticket in self._orphan_records:
@@ -1067,6 +1165,7 @@ class ShardedOverlayServer:
             yielded = False
             while self._orphaned:
                 t, outs = self._orphaned.popitem(last=False)
+                self.telemetry.inc("fleet.orphan_claims")
                 self._note_claimed([t])
                 yielded = True
                 yield t, outs
@@ -1139,6 +1238,7 @@ class ShardedOverlayServer:
         results: dict[int, list] = {}
         for rep_id, rep in enumerate(self.replicas):
             results.update(self._to_global(rep_id, rep.flush()))
+        self.telemetry.inc("fleet.orphan_claims", len(self._orphaned))
         results.update(self._orphaned)
         self._orphaned.clear()
         self._note_claimed(results)
@@ -1153,6 +1253,7 @@ class ShardedOverlayServer:
         results: dict[int, list] = {}
         for rep_id, rep in enumerate(self.replicas):
             results.update(self._to_global(rep_id, rep.flush_sync()))
+        self.telemetry.inc("fleet.orphan_claims", len(self._orphaned))
         results.update(self._orphaned)
         self._orphaned.clear()
         self._note_claimed(results)
@@ -1224,23 +1325,28 @@ class ShardedOverlayServer:
         # scaling counters are per-study telemetry like hit rates; the
         # autoscaler's own decision counters reset with them (its control
         # state — streaks, cooldown — is not a metric and survives)
-        self.n_scale_ups = self.n_scale_downs = 0
-        self.n_evacuated_requests = self.n_evacuated_tiles = 0
+        self.telemetry.reset(names=(
+            "fleet.scale_ups", "fleet.scale_downs",
+            "fleet.evacuated_requests", "fleet.evacuated_tiles"))
         if self.autoscaler is not None:
             self.autoscaler.reset_metrics()
 
     def stats(self) -> dict:
         per = [rep.stats() for rep in self.replicas]
+        # rounds/requests aggregate from the SHARED sink, not the live
+        # replicas: every replica writes through MultiSink(own, fleet),
+        # so work served by since-drained replicas is already in there
         s = {"replicas": self.n_replicas,
+             "submits": self.n_submits,
              "pending": self.pending,
              "queue_depth": [p["queued"] for p in per],
              "queued_tiles": [p["queued_tiles"] for p in per],
              "per_replica": per,
-             "rounds": sum(p["rounds"] for p in per) + self._retired_rounds,
-             "requests": (sum(p["requests"] for p in per)
-                          + self._retired_requests),
+             "rounds": int(self.telemetry.counter("engine.rounds")),
+             "requests": int(self.telemetry.counter("engine.delivered")),
              "evictions": (sum(p["evictions"] for p in per)
-                           + self._retired_evictions),
+                           + int(self.telemetry.counter(
+                               "fleet.retired_evictions"))),
              "scale_ups": self.n_scale_ups,
              "scale_downs": self.n_scale_downs,
              "evacuated_requests": self.n_evacuated_requests,
@@ -1249,6 +1355,9 @@ class ShardedOverlayServer:
              "retired_lifetime_s": self.retired_lifetime_s,
              "peak_replicas": self.peak_replicas,
              "orphaned_results": len(self._orphaned),
+             "orphan_claims": int(
+                 self.telemetry.counter("fleet.orphan_claims")),
+             "claims": int(self.telemetry.counter("fleet.claims")),
              "tenant_latency": self.tenant_latency_percentiles()}
         s.update(self.router.stats())
         if self.autoscaler is not None:

@@ -91,7 +91,7 @@ class PressureAutoscaler:
     def __init__(self, up_tiles: float = 32.0, up_rounds: int = 3,
                  down_rounds: int = 8, cooldown_s: float = 0.0,
                  min_replicas: int = 1, max_replicas: int = 8,
-                 clock=time.monotonic):
+                 clock=time.monotonic, telemetry=None):
         if up_tiles <= 0:
             raise ValueError(f"up_tiles must be > 0, got {up_tiles}")
         if up_rounds < 1 or down_rounds < 1:
@@ -115,10 +115,28 @@ class PressureAutoscaler:
         self._idle: dict = {}           # replica object -> idle-obs streak
         self._last_action: float | None = None
         self._last_n = 0                # fleet size at last observation
-        self.n_observations = 0
-        self.n_up_decisions = 0
-        self.n_down_decisions = 0
-        self.n_saturated_observations = 0
+        from repro.telemetry import InMemorySink
+        #: structured sink the decision counters live in; an attaching
+        #: fleet re-binds this to its shared sink (see repro.telemetry)
+        self.telemetry = (telemetry if telemetry is not None
+                          else InMemorySink(clock=clock))
+
+    @property
+    def n_observations(self) -> int:
+        return int(self.telemetry.counter("autoscaler.observations"))
+
+    @property
+    def n_up_decisions(self) -> int:
+        return int(self.telemetry.counter("autoscaler.up_decisions"))
+
+    @property
+    def n_down_decisions(self) -> int:
+        return int(self.telemetry.counter("autoscaler.down_decisions"))
+
+    @property
+    def n_saturated_observations(self) -> int:
+        return int(self.telemetry.counter(
+            "autoscaler.saturated_observations"))
 
     # ------------------------------------------------------- edge coupling
     @property
@@ -151,7 +169,7 @@ class PressureAutoscaler:
         replicas = list(fleet.replicas)
         n = len(replicas)
         self._last_n = n
-        self.n_observations += 1
+        self.telemetry.inc("autoscaler.observations")
         # streaks update on EVERY observation — the cooldown gates actions,
         # not evidence, so pressure seen during cooldown still counts
         pressure = sum(rep.queued_tiles for rep in replicas) / max(1, n)
@@ -164,14 +182,15 @@ class PressureAutoscaler:
             self._idle[rep] = (self._idle.get(rep, 0) + 1
                                if rep.pending_tiles == 0 else 0)
         if self.saturated:
-            self.n_saturated_observations += 1
+            self.telemetry.inc("autoscaler.saturated_observations")
         if (self._last_action is not None
                 and self.clock() - self._last_action < self.cooldown_s):
             return []
         if self._hot_streak >= self.up_rounds and n < self.max_replicas:
             self._hot_streak = 0
             self._last_action = self.clock()
-            self.n_up_decisions += 1
+            self.telemetry.inc("autoscaler.up_decisions")
+            self.telemetry.event("autoscale_up", pressure=pressure, fleet=n)
             return [("up", None)]
         if n > self.min_replicas:
             ripe = [(self._idle.get(rep, 0), i)
@@ -181,7 +200,8 @@ class PressureAutoscaler:
                 _, i = max(ripe)
                 self._idle.pop(replicas[i], None)
                 self._last_action = self.clock()
-                self.n_down_decisions += 1
+                self.telemetry.inc("autoscaler.down_decisions")
+                self.telemetry.event("autoscale_down", replica=i, fleet=n)
                 return [("down", i)]
         return []
 
@@ -205,7 +225,4 @@ class PressureAutoscaler:
     def reset_metrics(self) -> None:
         """Drop decision counters; streaks and the cooldown timer are
         control state, not metrics, and are kept."""
-        self.n_observations = 0
-        self.n_up_decisions = 0
-        self.n_down_decisions = 0
-        self.n_saturated_observations = 0
+        self.telemetry.reset(prefix="autoscaler.")

@@ -60,7 +60,9 @@ class AutoPump:
             outs = pump.result(t)          # pump delivers in background
     """
 
-    def __init__(self, server, poll_interval: float = 0.005):
+    def __init__(self, server, poll_interval: float = 0.005,
+                 telemetry=None):
+        from repro.telemetry import InMemorySink
         if poll_interval <= 0:
             raise ValueError(
                 f"poll_interval must be > 0, got {poll_interval}")
@@ -70,15 +72,29 @@ class AutoPump:
         self._cond = threading.Condition(self._lock)
         self._wake = threading.Event()
         self._stop = threading.Event()
-        self.n_pump_rounds = 0
+        #: the structured sink the pump counters live in — by default
+        #: the WRAPPED SERVER's sink, so one store carries engine and
+        #: pump telemetry together (see repro.telemetry)
+        self.telemetry = (telemetry if telemetry is not None
+                          else getattr(server, "telemetry", None)
+                          or InMemorySink())
         #: tick observers, called AFTER every pump iteration (worked or
         #: idle) from the pump thread with the lock RELEASED — see
         #: ``add_tick_listener``
         self._listeners: list = []
-        self.n_listener_errors = 0
         self._thread = threading.Thread(target=self._run,
                                         name="overlay-autopump", daemon=True)
         self._thread.start()
+
+    @property
+    def n_pump_rounds(self) -> int:
+        """Productive pump iterations (a round delivered / fleet resized)."""
+        return int(self.telemetry.counter("pump.rounds"))
+
+    @property
+    def n_listener_errors(self) -> int:
+        """Tick listeners that raised (counted, skipped, never fatal)."""
+        return int(self.telemetry.counter("pump.listener_errors"))
 
     # ------------------------------------------------------------ observers
     def add_tick_listener(self, fn) -> None:
@@ -108,16 +124,19 @@ class AutoPump:
             try:
                 fn(worked)
             except Exception:
-                self.n_listener_errors += 1
+                self.telemetry.inc("pump.listener_errors")
 
     # ------------------------------------------------------------ pump loop
     def _run(self) -> None:
         while not self._stop.is_set():
             with self._cond:
                 worked = self.server.pump_once()
+                self.telemetry.inc("pump.ticks")
                 if worked:
-                    self.n_pump_rounds += 1
+                    self.telemetry.inc("pump.rounds")
                     self._cond.notify_all()
+                else:
+                    self.telemetry.inc("pump.idle_ticks")
             self._notify_listeners(worked)
             if not worked:
                 # idle: sleep until a submit wakes us (or the poll tick —

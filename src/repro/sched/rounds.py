@@ -108,15 +108,34 @@ class DeficitRoundRobin:
 
     ``quantum_tiles`` is the per-pass deficit increment in dispatch
     tiles; ``None`` means unbounded (pure round-robin over tenants).
+
+    ``tenant_quanta`` maps individual tenants to their OWN per-pass
+    quantum (tiles, or ``None`` for unbounded), overriding
+    ``quantum_tiles`` flow by flow — the SLO-class mechanism the
+    slo_study sweeps: a latency tier gets a large quantum (its requests
+    clear in the next round), a preemptible bulk tier gets a small one
+    (its backlog trickles through without crowding the round).  Tenants
+    absent from the map use ``quantum_tiles``.
     """
 
-    def __init__(self, quantum_tiles: float | None = None):
+    def __init__(self, quantum_tiles: float | None = None,
+                 tenant_quanta: dict | None = None):
         if quantum_tiles is not None and quantum_tiles <= 0:
             raise ValueError(
                 f"quantum_tiles must be > 0 or None (unbounded), got "
                 f"{quantum_tiles}; a non-positive quantum can never cover "
                 f"a request's tile cost")
         self.quantum_tiles = quantum_tiles
+        self.tenant_quanta = dict(tenant_quanta or {})
+        for tenant, q in self.tenant_quanta.items():
+            if q is not None and q <= 0:
+                raise ValueError(
+                    f"tenant_quanta[{tenant!r}] must be > 0 or None "
+                    f"(unbounded), got {q}")
+
+    def quantum_for(self, tenant: str) -> float | None:
+        """The per-pass deficit increment for one tenant's flow."""
+        return self.tenant_quanta.get(tenant, self.quantum_tiles)
 
     # ------------------------------------------------------------- hooks
     def _max_round_tiles(self) -> float:
@@ -192,8 +211,9 @@ class DeficitRoundRobin:
                 flow = flows[tenant]
                 if not flow.queue:
                     continue
-                flow.deficit = (math.inf if self.quantum_tiles is None
-                                else flow.deficit + self.quantum_tiles)
+                quantum = self.quantum_for(tenant)
+                flow.deficit = (math.inf if quantum is None
+                                else flow.deficit + quantum)
                 taken, used = self._serve_flow(flow, keys, round_kernels,
                                                used)
                 round_reqs.extend(taken)
@@ -215,8 +235,9 @@ class CoalescingPolicy(DeficitRoundRobin):
     """
 
     def __init__(self, quantum_tiles: float | None = None,
-                 coalesce_tiles: int = 32):
-        super().__init__(quantum_tiles)
+                 coalesce_tiles: int = 32,
+                 tenant_quanta: dict | None = None):
+        super().__init__(quantum_tiles, tenant_quanta=tenant_quanta)
         if coalesce_tiles < 0:
             raise ValueError(
                 f"coalesce_tiles must be >= 0, got {coalesce_tiles}")
@@ -277,8 +298,9 @@ class DynamicTilePolicy(DeficitRoundRobin):
     def __init__(self, quantum_tiles: float | None = None,
                  target_latency_s: float = 0.05, init_tiles: int = 32,
                  min_tiles: int = 4, max_tiles: int = 4096,
-                 grow: float = 1.25, shrink: float = 0.5):
-        super().__init__(quantum_tiles)
+                 grow: float = 1.25, shrink: float = 0.5,
+                 tenant_quanta: dict | None = None):
+        super().__init__(quantum_tiles, tenant_quanta=tenant_quanta)
         if target_latency_s <= 0:
             raise ValueError(
                 f"target_latency_s must be > 0, got {target_latency_s}")

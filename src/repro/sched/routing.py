@@ -72,8 +72,10 @@ class ResidencyRouter:
     """
 
     def __init__(self, directory=None, migrate_factor: float = 4.0,
-                 migrate_min_tiles: int = 16, migrate_cooldown: int = 32):
+                 migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
+                 telemetry=None):
         from repro.core.bank import BankDirectory
+        from repro.telemetry import InMemorySink
         if migrate_factor < 1:
             raise ValueError(
                 f"migrate_factor must be >= 1, got {migrate_factor}")
@@ -82,10 +84,24 @@ class ResidencyRouter:
         self.migrate_min_tiles = migrate_min_tiles
         self.migrate_cooldown = migrate_cooldown
         self._migrated_at: dict[tuple, int] = {}
-        self.n_routed = 0           # cooldown clock: routed submits
-        self.n_hits = 0
-        self.n_misses = 0
-        self.n_migrations = 0
+        self.n_routed = 0           # cooldown clock: routed submits —
+        #                             control state, NOT a metric (resets
+        #                             would warp migration cooldowns)
+        #: structured sink the routing counters live in; the fleet
+        #: re-binds this to its shared sink (see repro.telemetry)
+        self.telemetry = telemetry if telemetry is not None else InMemorySink()
+
+    @property
+    def n_hits(self) -> int:
+        return int(self.telemetry.counter("router.hits"))
+
+    @property
+    def n_misses(self) -> int:
+        return int(self.telemetry.counter("router.misses"))
+
+    @property
+    def n_migrations(self) -> int:
+        return int(self.telemetry.counter("router.migrations"))
 
     # ------------------------------------------------------------- route
     def route(self, kernel, fleet) -> int:
@@ -106,14 +122,16 @@ class ResidencyRouter:
             cooled = (last is None
                       or self.n_routed - last >= self.migrate_cooldown)
             if not (hot and cooled):
-                self.n_hits += 1
+                self.telemetry.inc("router.hits")
                 self.n_routed += 1
                 return owner
             target = coolest
             self._migrated_at[key] = self.n_routed
-            self.n_migrations += 1
+            self.telemetry.inc("router.migrations")
+            self.telemetry.event("migrate", key=repr(key), frm=owner,
+                                 to=coolest)
         else:
-            self.n_misses += 1
+            self.telemetry.inc("router.misses")
             target = coolest
         # warm the context on its new home and publish the residency; a
         # momentarily all-pinned bank defers the load to the replica's own
@@ -150,7 +168,8 @@ class ResidencyRouter:
                 "directory": self.directory.stats()}
 
     def reset_metrics(self) -> None:
-        self.n_hits = self.n_misses = self.n_migrations = 0
+        self.telemetry.reset(names=("router.hits", "router.misses",
+                                    "router.migrations"))
         d = self.directory
         d.n_fresh = d.n_stale = d.n_unknown = 0
         d.n_republished = d.n_unpublished = 0
@@ -178,15 +197,21 @@ class WorkStealingRouter(ResidencyRouter):
 
     def __init__(self, directory=None, migrate_factor: float = 4.0,
                  migrate_min_tiles: int = 16, migrate_cooldown: int = 32,
-                 steal_min_tiles: int = 4):
+                 steal_min_tiles: int = 4, telemetry=None):
         super().__init__(directory, migrate_factor, migrate_min_tiles,
-                         migrate_cooldown)
+                         migrate_cooldown, telemetry=telemetry)
         if steal_min_tiles < 1:
             raise ValueError(
                 f"steal_min_tiles must be >= 1, got {steal_min_tiles}")
         self.steal_min_tiles = steal_min_tiles
-        self.n_steals = 0
-        self.n_stolen_requests = 0
+
+    @property
+    def n_steals(self) -> int:
+        return int(self.telemetry.counter("router.steals"))
+
+    @property
+    def n_stolen_requests(self) -> int:
+        return int(self.telemetry.counter("router.stolen_requests"))
 
     def _pick_group(self, victim) -> tuple | None:
         """The victim's best queued kernel-group to move: largest by
@@ -252,8 +277,10 @@ class WorkStealingRouter(ResidencyRouter):
                 break
             if not stolen:
                 break
-            self.n_steals += 1
-            self.n_stolen_requests += len(stolen)
+            self.telemetry.inc("router.steals")
+            self.telemetry.inc("router.stolen_requests", len(stolen))
+            self.telemetry.event("steal", victim=victim, thief=thief,
+                                 requests=len(stolen))
             moved += 1
         return moved
 
@@ -265,7 +292,8 @@ class WorkStealingRouter(ResidencyRouter):
 
     def reset_metrics(self) -> None:
         super().reset_metrics()
-        self.n_steals = self.n_stolen_requests = 0
+        self.telemetry.reset(names=("router.steals",
+                                    "router.stolen_requests"))
 
 
 def make_router(steal: bool = False, **kw):

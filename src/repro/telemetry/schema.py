@@ -1,0 +1,93 @@
+"""Source-of-truth schema for the serving layers' ``stats()`` dicts.
+
+PRs 2-6 each grew their layer's ``stats()`` by hand; the key sets had
+no owner, so a rename or accidental drop surfaced only when a
+benchmark's pretty-printer threw a KeyError.  These frozensets are the
+contract: `tests/test_stats_schema.py` asserts every layer's stats()
+matches them exactly, and CI pydoc-smokes this module so the docs
+can't reference keys that don't exist.
+
+Composition mirrors the layering:
+
+- engine stats   = BANK ∪ ENGINE            (OverlayServer.stats)
+- fleet stats    = FLEET ∪ ROUTER [∪ STEAL] [∪ AUTOSCALER]
+- pump stats     = wrapped server stats ∪ PUMP   (AutoPump.stats)
+- gateway stats  = GATEWAY (with ``fleet`` holding the pump's dict)
+"""
+
+from __future__ import annotations
+
+# ContextBank.stats(), folded into every engine stats() dict.
+BANK_STATS_KEYS = frozenset({
+    "capacity", "resident", "free", "loads", "evictions", "hits",
+    "pinned", "generation", "ctx_cache", "occupancy", "pinned_fraction",
+})
+
+# OverlayServer.stats() minus the bank keys.
+ENGINE_STATS_KEYS = frozenset({
+    "submits", "rounds", "requests", "pending", "inflight", "queued",
+    "queued_tiles", "tenants", "round_policy", "tenant_latency",
+})
+
+# ResidencyRouter.stats(); WorkStealingRouter adds STEAL_STATS_KEYS.
+ROUTER_STATS_KEYS = frozenset({
+    "router", "route_hits", "route_misses", "residency_hit_rate",
+    "migrations", "steals", "directory",
+})
+STEAL_STATS_KEYS = frozenset({"stolen_requests"})
+
+# PressureAutoscaler.stats(), merged into fleet stats when attached.
+AUTOSCALER_STATS_KEYS = frozenset({
+    "autoscaler", "up_tiles", "up_rounds", "down_rounds", "cooldown_s",
+    "min_replicas", "max_replicas", "observations", "up_decisions",
+    "down_decisions", "hot_streak", "scale_up_pending", "saturated",
+    "saturated_observations",
+})
+
+# ShardedOverlayServer.stats() minus router/autoscaler keys.
+FLEET_STATS_KEYS = frozenset({
+    "replicas", "submits", "pending", "queue_depth", "queued_tiles",
+    "per_replica", "rounds", "requests", "evictions", "scale_ups",
+    "scale_downs", "evacuated_requests", "evacuated_tiles",
+    "replicas_retired", "retired_lifetime_s", "peak_replicas",
+    "orphaned_results", "orphan_claims", "claims", "tenant_latency",
+})
+
+# AutoPump.stats() adds these on top of the wrapped server's dict.
+PUMP_STATS_KEYS = frozenset({
+    "pump_rounds", "pump_alive", "pump_listeners", "pump_listener_errors",
+})
+
+# OverlayGateway.stats(); ``fleet`` nests the pump's stats dict.
+GATEWAY_STATS_KEYS = frozenset({
+    "edge_attempts", "edge_submitted", "edge_shed", "edge_queued",
+    "edge_park_cancelled", "edge_waiters", "peak_edge_waiters",
+    "peak_fleet_tiles", "max_fleet_tiles", "window", "widened_ticks",
+    "connections", "connects", "disconnects", "orphan_sessions",
+    "orphaned_tickets", "orphaned_results_held", "reclaimed",
+    "outstanding", "fleet",
+})
+
+_KINDS = {
+    "engine": (BANK_STATS_KEYS | ENGINE_STATS_KEYS, PUMP_STATS_KEYS),
+    "fleet": (FLEET_STATS_KEYS | ROUTER_STATS_KEYS,
+              STEAL_STATS_KEYS | AUTOSCALER_STATS_KEYS | PUMP_STATS_KEYS),
+    "gateway": (GATEWAY_STATS_KEYS, frozenset()),
+}
+
+
+def check_stats(kind: str, stats: dict) -> None:
+    """Assert ``stats`` matches the schema for ``kind``.
+
+    ``kind`` is ``"engine"``, ``"fleet"``, or ``"gateway"``.  Every
+    required key must be present and no key outside required ∪ optional
+    may appear; raises ``AssertionError`` naming the drift either way.
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"unknown stats kind {kind!r}")
+    required, optional = _KINDS[kind]
+    keys = set(stats)
+    missing = required - keys
+    extra = keys - required - optional
+    assert not missing, f"{kind} stats() missing keys: {sorted(missing)}"
+    assert not extra, f"{kind} stats() has undeclared keys: {sorted(extra)}"

@@ -1,0 +1,175 @@
+"""Schema-drift lockdown for the serving layers' ``stats()`` dicts.
+
+`repro.telemetry.schema` is the single source of truth for which keys
+each layer's ``stats()`` exposes.  These tests exercise every layer in
+its meaningful configurations (steal on/off, autoscaler on/off, bare
+vs pump-wrapped, gateway) and assert the emitted dicts match the
+schema EXACTLY — a key renamed, dropped, or silently added anywhere in
+serve/pump/autoscale/gateway fails here with the drift named.
+
+Also: edge-case coverage for `tenant_latency_summary`, the one shared
+reducer behind every ``tenant_latency`` stats entry and the SLO study.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import benchmark
+from repro.launch.gateway import OverlayGateway
+from repro.launch.serve import (
+    OverlayServer,
+    ShardedOverlayServer,
+    tenant_latency_summary,
+)
+from repro.sched import AutoPump, PressureAutoscaler
+from repro.telemetry import (
+    AUTOSCALER_STATS_KEYS,
+    PUMP_STATS_KEYS,
+    STEAL_STATS_KEYS,
+    check_stats,
+)
+
+
+@pytest.fixture(scope="module")
+def kernel():
+    return compile_program(benchmark("poly5"))
+
+
+def _xs(kernel, batch=33, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+            for _ in kernel.dfg.inputs]
+
+
+def _work(srv, kernel, n=3):
+    for i in range(n):
+        srv.submit(kernel, _xs(kernel, seed=i), tenant=f"t{i % 2}")
+    srv.flush()
+
+
+# ============================================================ engine stats
+def test_engine_stats_schema(kernel):
+    srv = OverlayServer(bank_capacity=4, round_kernels=2, slo_s=0.5)
+    check_stats("engine", srv.stats())          # cold: no traffic yet
+    _work(srv, kernel)
+    check_stats("engine", srv.stats())
+
+
+def test_engine_stats_schema_under_pump(kernel):
+    srv = OverlayServer(bank_capacity=4, round_kernels=2)
+    with AutoPump(srv, poll_interval=0.001) as pump:
+        pump.submit(kernel, _xs(kernel))
+        pump.wait_idle(timeout=30.0)
+        st = pump.stats()
+        check_stats("engine", st)               # pump keys are optional
+        assert PUMP_STATS_KEYS <= set(st)       # ...but all present via pump
+
+
+# ============================================================= fleet stats
+@pytest.mark.parametrize("steal", [False, True], ids=["nosteal", "steal"])
+@pytest.mark.parametrize("autoscale", [False, True], ids=["fixed", "auto"])
+def test_fleet_stats_schema(kernel, steal, autoscale):
+    auto = (PressureAutoscaler(up_tiles=8.0, min_replicas=1, max_replicas=3)
+            if autoscale else None)
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=4,
+                               round_kernels=2, steal=steal,
+                               autoscaler=auto)
+    st = srv.stats()
+    check_stats("fleet", st)
+    assert ("stolen_requests" in st) == steal
+    assert (AUTOSCALER_STATS_KEYS <= set(st)) == autoscale
+    _work(srv, kernel, n=5)
+    srv.add_replica()
+    srv.drain_replica(0)
+    check_stats("fleet", srv.stats())           # churn must not drift keys
+    for rep_stats in srv.stats()["per_replica"]:
+        check_stats("engine", rep_stats)        # nested engine dicts too
+
+
+# =========================================================== gateway stats
+def test_gateway_stats_schema(kernel):
+    async def scenario():
+        srv = ShardedOverlayServer(n_replicas=1, bank_capacity=4,
+                                   round_kernels=2)
+        async with OverlayGateway(srv, max_fleet_tiles=64,
+                                  overflow="wait") as gw:
+            check_stats("gateway", gw.stats())
+            async with gw.connect(tenant="t0", session="s0") as conn:
+                t = await conn.submit(kernel, _xs(kernel))
+                await conn.result(t)
+            st = gw.stats()
+            check_stats("gateway", st)
+            check_stats("fleet", st["fleet"])   # nested pump-over-fleet dict
+            assert PUMP_STATS_KEYS <= set(st["fleet"])
+    asyncio.run(scenario())
+
+
+def test_check_stats_names_the_drift():
+    srv = OverlayServer(bank_capacity=4, round_kernels=2)
+    st = srv.stats()
+    broken = dict(st)
+    del broken["rounds"]
+    with pytest.raises(AssertionError, match="missing.*rounds"):
+        check_stats("engine", broken)
+    broken = dict(st)
+    broken["surprise_key"] = 1
+    with pytest.raises(AssertionError, match="undeclared.*surprise_key"):
+        check_stats("engine", broken)
+    with pytest.raises(ValueError, match="unknown stats kind"):
+        check_stats("nope", st)
+
+
+# ============================================== tenant_latency_summary edges
+def test_latency_summary_empty():
+    assert tenant_latency_summary([]) == {}
+    assert tenant_latency_summary([], slo_s=0.1) == {}
+
+
+def test_latency_summary_no_slo():
+    out = tenant_latency_summary([("a", 0.1), ("a", 0.3), ("b", 0.2)])
+    assert set(out) == {"a", "b"}
+    assert out["a"]["n"] == 2 and out["b"]["n"] == 1
+    assert out["a"]["mean"] == pytest.approx(0.2)
+    assert "slo_attainment" not in out["a"]
+
+
+def test_latency_summary_zero_slo():
+    # slo_s=0.0 is a real (if brutal) target, not falsy-None: nothing
+    # with positive latency attains it
+    out = tenant_latency_summary([("a", 0.1), ("a", 0.2)], slo_s=0.0)
+    assert out["a"]["slo_attained"] == 0
+    assert out["a"]["slo_attainment"] == 0.0
+    assert out["a"]["slo_total"] == 2
+
+
+def test_latency_summary_per_tenant_dict():
+    samples = [("lat", 0.01), ("lat", 0.04), ("bulk", 0.5), ("mystery", 0.2)]
+    out = tenant_latency_summary(samples, slo_s={"lat": 0.05, "bulk": 0.1})
+    assert out["lat"]["slo_attainment"] == 1.0
+    assert out["bulk"]["slo_attainment"] == 0.0
+    # tenant absent from the dict gets percentiles but no SLO fields
+    assert "slo_attainment" not in out["mystery"]
+    assert out["mystery"]["n"] == 1
+
+
+def test_latency_summary_orphan_only_records(kernel):
+    """Latency records written by a drained replica survive as part of
+    the fleet's tenant_latency stats even when every one of its results
+    was orphaned (claimed later through the orphan path)."""
+    srv = ShardedOverlayServer(n_replicas=2, bank_capacity=4,
+                               round_kernels=2, slo_s=60.0)
+    tickets = [srv.submit(kernel, _xs(kernel, seed=i), tenant="orphan-t")
+               for i in range(4)]
+    for rep in srv.replicas:
+        rep._fill_pipeline()                   # launch rounds -> pins held
+    srv.drain_replica(0)                       # in-flight results orphaned
+    assert srv.stats()["orphaned_results"] > 0
+    out = {t: srv.result(t) for t in tickets}  # mixed orphan/live claims
+    assert set(out) == set(tickets)
+    tl = srv.stats()["tenant_latency"]
+    assert tl["orphan-t"]["n"] == 4
+    assert tl["orphan-t"]["slo_attainment"] == 1.0
+    check_stats("fleet", srv.stats())

@@ -1,0 +1,230 @@
+"""Conservation invariants over the structured telemetry sink.
+
+The telemetry refactor's whole point is that the serving stack's story
+is auditable from ONE store: every submit, delivery, orphan, shed, and
+scaling action lands in the fleet's `Telemetry` sink, so flow
+conservation can be asserted from the OUTSIDE at any barrier — without
+reaching into engine internals — and a counter that drifts from the
+requests it claims to describe fails loudly here.
+
+Two seeded chaos drivers, adapted from the existing soak harnesses
+(tests/test_autoscale.py, tests/test_gateway.py):
+
+* FLEET CHAOS — random interleavings of submits/bursts, every drain
+  flavour, and forced grow/drain with a live autoscaler.  After EVERY
+  action:
+      submits == delivered + pending          (no request lost or dup'd)
+      scale_ups - scale_downs == replicas - initial
+      orphans_created == orphan_claims + orphans_held
+      claims <= submits; at the final barrier claims == submits
+* GATEWAY CHURN — connect/submit/drop/reclaim churn over an autoscaled
+  fleet behind the asyncio edge.  At every barrier:
+      edge attempts == submitted + shed + park_cancelled + parked
+      edge submitted == fleet submits        (all traffic rides the edge)
+  and at the final barrier the fleet conservation above, with zero
+  orphans outstanding.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.launch.gateway import OverlayGateway
+from repro.launch.serve import ShardedOverlayServer
+from repro.sched import PressureAutoscaler
+
+ALL_NAMES = BENCH_NAMES + ("gradient",)
+
+
+@pytest.fixture(scope="module")
+def kernels():
+    return {n: compile_program(benchmark(n)) for n in ALL_NAMES}
+
+
+def _xs(kernel, batch, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+            for _ in kernel.dfg.inputs]
+
+
+def _assert_fleet_conserved(srv, initial_replicas):
+    """The sink-level conservation laws that must hold at EVERY barrier
+    (single-threaded drivers: between actions nothing is in between
+    states)."""
+    c = srv.telemetry.counter
+    submits = c("fleet.submits")
+    delivered = c("engine.delivered")
+    assert submits == delivered + srv.pending, (
+        f"flow conservation broke: {submits} submits != "
+        f"{delivered} delivered + {srv.pending} pending")
+    assert (c("fleet.scale_ups") - c("fleet.scale_downs")
+            == srv.n_replicas - initial_replicas), (
+        "scaling ledger broke: ups - downs != replicas - initial")
+    assert (c("fleet.orphaned_results")
+            == c("fleet.orphan_claims") + len(srv._orphaned)), (
+        "orphan conservation broke: created != claimed + held")
+    assert c("fleet.claims") <= submits, "claimed more than was submitted"
+    # the engine-side ledger rides the same shared sink: every fleet
+    # submit became exactly one replica-engine submit (steals/evacuation
+    # adopt requests without re-counting them)
+    assert c("engine.submits") == submits
+
+
+# ============================================================ fleet chaos
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fleet_chaos_conservation(kernels, seed):
+    rng = np.random.RandomState(0x7E1E + seed)
+    names = list(kernels)
+    auto = PressureAutoscaler(
+        up_tiles=float(rng.choice([4.0, 16.0])),
+        up_rounds=int(rng.choice([1, 2])),
+        down_rounds=int(rng.choice([2, 4])),
+        min_replicas=1, max_replicas=5)
+    srv = ShardedOverlayServer(
+        n_replicas=int(rng.choice([1, 2, 3])), bank_capacity=4,
+        round_kernels=2, max_inflight=int(rng.choice([1, 2])),
+        steal=bool(rng.rand() < 0.5), autoscaler=auto)
+    initial = srv.n_replicas
+    pending: set[int] = set()
+    delivered: set[int] = set()
+
+    def claim(results):
+        for t in results:
+            assert t not in delivered, "ticket delivered twice"
+            delivered.add(t)
+            pending.discard(t)
+
+    for _step in range(30):
+        action = rng.choice(
+            ["submit", "burst", "drain", "result", "grow", "shrink"],
+            p=[0.35, 0.15, 0.2, 0.1, 0.1, 0.1])
+        if action in ("submit", "burst"):
+            for _ in range(1 if action == "submit"
+                           else int(rng.randint(4, 9))):
+                k = kernels[names[rng.randint(len(names))]]
+                xs = _xs(k, int(rng.choice([33, 64, 96])),
+                         int(rng.randint(1 << 30)))
+                pending.add(srv.submit(k, xs, tenant=f"t{rng.randint(3)}"))
+        elif action == "drain" and pending:
+            mode = rng.choice(["flush", "flush_sync", "as_completed"])
+            if mode == "flush":
+                claim(srv.flush())
+            elif mode == "flush_sync":
+                claim(srv.flush_sync())
+            else:
+                claim(dict(srv.as_completed()))
+            assert not pending, "a drain left tickets undelivered"
+        elif action == "result" and pending:
+            t = list(pending)[rng.randint(len(pending))]
+            claim({t: srv.result(t)})
+        elif action == "grow" and srv.n_replicas < 6:
+            srv.add_replica()
+        elif action == "shrink" and srv.n_replicas > 1:
+            srv.drain_replica(int(rng.randint(srv.n_replicas)))
+        _assert_fleet_conserved(srv, initial)
+
+    # forced mutation pair + final barrier: everything delivered AND the
+    # ledgers close exactly
+    srv.add_replica()
+    srv.drain_replica(0)
+    _assert_fleet_conserved(srv, initial)
+    claim(srv.flush())
+    _assert_fleet_conserved(srv, initial)
+    assert not pending and srv.pending == 0
+    c = srv.telemetry.counter
+    assert c("fleet.claims") == c("fleet.submits"), (
+        "final barrier: every submitted ticket must be claimed exactly once")
+    assert len(srv._orphaned) == 0
+    # the stats() surface reads the same sink (read-through, no fork)
+    st = srv.stats()
+    assert st["submits"] == int(c("fleet.submits"))
+    assert st["requests"] == int(c("engine.delivered"))
+    assert st["scale_ups"] == int(c("fleet.scale_ups"))
+    assert st["claims"] == int(c("fleet.claims"))
+
+
+# ========================================================== gateway churn
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_gateway_churn_conservation(kernels, seed):
+    async def scenario():
+        rng = np.random.RandomState(0xED6E + seed)
+        names = list(kernels)
+        auto = PressureAutoscaler(up_tiles=4.0, up_rounds=1, down_rounds=3,
+                                  min_replicas=1, max_replicas=3)
+        srv = ShardedOverlayServer(n_replicas=1, bank_capacity=4,
+                                   round_kernels=2, autoscaler=auto)
+        gw = OverlayGateway(srv, max_fleet_tiles=48, overflow="wait")
+        c = gw.telemetry.counter         # one sink: edge + fleet + engine
+
+        def edge_conserved():
+            parked = sum(1 for w in gw._edge_waiters if not w.future.done())
+            assert (c("edge.attempts")
+                    == c("edge.submitted") + c("edge.shed")
+                    + c("edge.park_cancelled") + c("edge.submit_errors")
+                    + parked), "edge ledger broke"
+            assert c("edge.submitted") == c("fleet.submits"), (
+                "every edge submit must become exactly one fleet submit")
+
+        async with gw:
+            outstanding: dict[str, list] = {}
+            dropped_sessions: list[str] = []
+            for phase in range(5):
+                conns = [gw.connect(tenant=f"t{i}",
+                                    session=f"s{seed}-{phase}-{i}")
+                         for i in range(3)]
+                tickets: dict[int, list] = {}
+                for i, conn in enumerate(conns):
+                    for j in range(int(rng.randint(2, 5))):
+                        k = kernels[names[rng.randint(len(names))]]
+                        xs = _xs(k, int(rng.choice([33, 64])),
+                                 seed * 7919 + phase * 101 + i * 13 + j)
+                        t = await conn.submit(k, xs)
+                        tickets.setdefault(i, []).append(t)
+                edge_conserved()
+                if phase == 2:
+                    # check-and-drain atomically: the autoscaler retires
+                    # replicas from pump ticks under this same lock, so a
+                    # count read outside it can go stale before the drain
+                    with gw.pump._lock:
+                        if srv.n_replicas > 1:
+                            srv.drain_replica(0)
+                for i, conn in enumerate(conns):
+                    if rng.rand() < 0.3:
+                        # drop with work in flight: tickets park under
+                        # the session, a later phase reclaims them
+                        dropped_sessions.append(conn.session)
+                        outstanding[conn.session] = tickets.get(i, [])
+                        await conn.close()
+                    else:
+                        for t in tickets.get(i, []):
+                            await conn.result(t)
+                        await conn.close()
+                edge_conserved()
+                # reclaim one parked session per phase, if any
+                if dropped_sessions and rng.rand() < 0.8:
+                    sess = dropped_sessions.pop(0)
+                    async with gw.connect(tenant="reclaimer",
+                                          session=sess) as rc:
+                        got = await rc.reclaim()
+                        want = outstanding.pop(sess)
+                        assert set(got) == set(want)
+                edge_conserved()
+            # final barrier: bulk-drain the fleet, then reclaim the rest
+            await gw.flush_sync()
+            for sess in dropped_sessions:
+                async with gw.connect(tenant="reclaimer",
+                                      session=sess) as rc:
+                    got = await rc.reclaim()
+                    assert set(got) == set(outstanding.pop(sess))
+            edge_conserved()
+            assert not outstanding
+            assert srv.pending == 0
+            assert c("fleet.submits") == c("engine.delivered")
+            assert gw.stats()["orphan_sessions"] == 0
+        # closing the gateway must not invent or lose edge traffic
+        edge_conserved()
+
+    asyncio.run(scenario())
