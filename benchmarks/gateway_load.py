@@ -31,13 +31,23 @@ the admission windows widen (reported as ``widened_ticks``), and at
 ``max_replicas`` saturation the edge sheds instead of queueing inside
 the fleet.
 
+``--loopback`` re-runs the SAME study over a real socket on 127.0.0.1
+(``launch/socket_gateway.py``): every client is a
+``RemoteOverlayClient`` speaking the length-prefixed frame protocol,
+and the row reports the FRAMING TAX — in-process rps / loopback rps —
+from an in-process arm run first with identical traffic.  All the
+asserts above still hold over the wire (headline metric:
+``loopback_rps``).
+
 ``--smoke`` shrinks everything for CI; ``--json PATH`` dumps the row for
 ``tools/bench_trajectory.py`` (headline metric: ``gateway_rps``).
 
 Run: PYTHONPATH=src python -m benchmarks.gateway_load
      JAX_DEVICES=2 PYTHONPATH=src python -m benchmarks.gateway_load \
          --autoscale --smoke --json artifacts/bench/gateway.json
-Reading the output: docs/SERVING.md#the-asyncio-gateway.
+     PYTHONPATH=src python -m benchmarks.gateway_load --loopback \
+         --smoke --json artifacts/bench/loopback.json
+Reading the output: docs/SERVING.md#the-socket-transport.
 """
 
 import argparse
@@ -89,18 +99,19 @@ class _ClientStats:
         self.parity_failures = []
 
 
-async def _client(gw, kernels, stats, *, cid, bursts, burst_size,
+async def _client(connect, kernels, stats, *, cid, bursts, burst_size,
                   seed, lull_s):
     """One connection's life: bursts of zipf-skewed submits, await the
     burst's results, idle, repeat.  Shed requests retry after the hint —
     offered load stays offered, so the edge counters reflect pressure,
-    not abandonment."""
+    not abandonment.  ``connect(tenant, session)`` yields either an
+    in-process ``GatewayConnection`` or a socket
+    ``RemoteOverlayClient`` — the surface is identical."""
     rng = np.random.RandomState(seed)
     names = list(kernels)
     p = _zipf_probs(len(names))
     rot = names[cid % len(names):] + names[:cid % len(names)]
-    async with gw.connect(tenant=f"tenant{cid}",
-                          session=f"conn-{cid}") as conn:
+    async with connect(f"tenant{cid}", f"conn-{cid}") as conn:
         for _b in range(bursts):
             reqs = {}
             for _r in range(burst_size):
@@ -135,11 +146,11 @@ def _parity_check(stats, k, xs, outs):
                 (k.dfg.name, o, float(np.abs(got - want).max())))
 
 
-async def _drive(gw, kernels, args):
+async def _drive(connect, kernels, args):
     stats = _ClientStats()
     t0 = time.perf_counter()
     await asyncio.gather(*(
-        _client(gw, kernels, stats, cid=i, bursts=args.bursts,
+        _client(connect, kernels, stats, cid=i, bursts=args.bursts,
                 burst_size=args.burst_size, seed=args.seed * 7919 + i,
                 lull_s=args.lull)
         for i in range(args.connections)))
@@ -147,7 +158,7 @@ async def _drive(gw, kernels, args):
     return stats, wall
 
 
-async def _overload_probe(gw, kernels):
+async def _overload_probe(connect, bound, kernels):
     """Deterministically saturate the edge: fire 4x the depth bound's
     worth of tiles in one ``gather`` — submits hit the capacity check
     back-to-back on the event loop, orders of magnitude faster than any
@@ -155,8 +166,8 @@ async def _overload_probe(gw, kernels):
     (``overflow="wait"``) before fleet depth can pass the bound.  Returns
     (admitted, delivered) so the zero-loss check covers the probe too."""
     k = kernels[next(iter(kernels))]
-    n = max(8, 2 * gw.max_fleet_tiles)      # batch-256 => 2 tiles each
-    async with gw.connect(tenant="probe", session="probe") as conn:
+    n = max(8, 2 * bound)                   # batch-256 => 2 tiles each
+    async with connect("probe", "probe") as conn:
         async def one():
             xs = [np.zeros((256,), np.float32) for _ in k.dfg.inputs]
             try:
@@ -178,6 +189,9 @@ def run_study(args) -> dict:
         widen_factor=args.widen_factor,
         overflow=args.overflow)
 
+    def connect(tenant, session):
+        return gw.connect(tenant=tenant, session=session)
+
     async def main():
         async with gw:
             # warmup: one request per kernel compiles the dispatch bucket
@@ -189,10 +203,11 @@ def run_study(args) -> dict:
                     await conn.submit(k, xs)
                 await conn.drain()
             n_warm = gw.n_submitted
-            stats, wall = await _drive(gw, kernels, args)
+            stats, wall = await _drive(connect, kernels, args)
             # untimed: force the edge to actually fire, whatever the
             # drain rate of this machine made of the timed window
-            admitted, got = await _overload_probe(gw, kernels)
+            admitted, got = await _overload_probe(
+                connect, gw.max_fleet_tiles, kernels)
             stats.delivered += got
             return stats, wall, gw.stats(), n_warm, (admitted, got)
 
@@ -229,6 +244,97 @@ def run_study(args) -> dict:
     return row, stats
 
 
+def run_loopback_study(args) -> dict:
+    """The same study over a real socket on 127.0.0.1.
+
+    Runs the in-process arm first (identical traffic parameters) for the
+    baseline, then drives every client as a ``RemoteOverlayClient``
+    against one ``OverlaySocketServer``.  The row's headline is
+    ``loopback_rps``; ``framing_tax = inproc_rps / loopback_rps`` is the
+    cost of length-prefixed frames + codec + TCP loopback relative to
+    same-process awaits.  Wire counters come from the server's
+    ``stats()`` so the JSON row doubles as a framing-overhead ledger.
+    """
+    from repro.launch.socket_gateway import (
+        OverlaySocketServer,
+        RemoteOverlayClient,
+    )
+    from repro.launch.transport import CODECS
+
+    inproc_row, _ = run_study(args)
+
+    kernels = _make_kernels()
+    gw = OverlayGateway.local(
+        n_replicas=args.replicas, autoscale=args.autoscale,
+        max_replicas=args.max_replicas,
+        bank_capacity=args.bank,
+        max_fleet_tiles=args.max_fleet_tiles,
+        widen_factor=args.widen_factor,
+        overflow=args.overflow)
+
+    async def main():
+        async with gw:
+            async with OverlaySocketServer(gw) as srv:
+                def connect(tenant, session):
+                    return RemoteOverlayClient(
+                        "127.0.0.1", srv.port,
+                        tenant=tenant, session=session)
+                # warmup: compiles dispatch buckets AND registers every
+                # kernel server-side, so the timed window sends key-only
+                # submits (register-once is part of what we measure FOR,
+                # not what we measure)
+                async with connect("warmup", "warmup") as conn:
+                    for k in kernels.values():
+                        xs = [np.zeros((BATCHES[0],), np.float32)
+                              for _ in k.dfg.inputs]
+                        await conn.submit(k, xs)
+                    await conn.drain()
+                n_warm = gw.n_submitted
+                stats, wall = await _drive(connect, kernels, args)
+                admitted, got = await _overload_probe(
+                    connect, gw.max_fleet_tiles, kernels)
+                stats.delivered += got
+                return (stats, wall, gw.stats(), srv.stats(), n_warm,
+                        (admitted, got))
+
+    stats, wall, gstats, sstats, n_warm, probe = asyncio.run(main())
+    n_requests = args.connections * args.bursts * args.burst_size
+    loopback_rps = stats.delivered / wall
+    row = {
+        "connections": args.connections,
+        "replicas": args.replicas,
+        "devices": jax.device_count(),
+        "autoscale": args.autoscale,
+        "requests": n_requests,
+        "delivered": stats.delivered,
+        "loopback_rps": loopback_rps,
+        "inproc_rps": inproc_row["gateway_rps"],
+        "framing_tax": inproc_row["gateway_rps"] / loopback_rps,
+        "codec": CODECS[0],
+        "wall_s": wall,
+        "max_fleet_tiles": args.max_fleet_tiles,
+        "widen_factor": args.widen_factor,
+        "overflow": args.overflow,
+        "n_shed": gstats["edge_shed"],
+        "shed_retries": stats.shed_retries,
+        "n_edge_queued": gstats["edge_queued"],
+        "peak_fleet_tiles": gstats["peak_fleet_tiles"],
+        "edge_submitted": gstats["edge_submitted"] - n_warm,
+        "parity_checked": stats.parity_checked,
+        "probe_admitted": probe[0],
+        "probe_delivered": probe[1],
+        "wire_frames_in": sstats["wire_frames_in"],
+        "wire_frames_out": sstats["wire_frames_out"],
+        "wire_bytes_in": sstats["wire_bytes_in"],
+        "wire_bytes_out": sstats["wire_bytes_out"],
+        "wire_connections": sstats["wire_connections"],
+        "wire_registers": sstats["wire_registers"],
+        "wire_rejects": sstats["wire_rejects"],
+        "wire_reparked": sstats["wire_reparked"],
+    }
+    return row, stats
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--connections", type=int, default=2000)
@@ -248,6 +354,9 @@ def main(argv=None) -> int:
     ap.add_argument("--autoscale", action="store_true")
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loopback", action="store_true",
+                    help="drive the study over a 127.0.0.1 socket and "
+                         "report the framing tax vs an in-process arm")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (fewer connections/requests)")
     ap.add_argument("--json", dest="json_path", default=None)
@@ -257,23 +366,44 @@ def main(argv=None) -> int:
         args.bursts = 1
         args.burst_size = min(args.burst_size, 2)
         args.lull = 0.0
+    if args.loopback:
+        # every client is a real TCP connection in loopback mode; stay
+        # comfortably under default fd limits (both arms use this count,
+        # so the framing-tax comparison is apples-to-apples)
+        args.connections = min(args.connections, 256)
 
-    row, stats = run_study(args)
-
-    print("connections,replicas,devices,gateway_rps,n_shed,"
-          "n_edge_queued,peak_fleet_tiles,widened_ticks")
-    print(f"{row['connections']},{row['replicas']},{row['devices']},"
-          f"{row['gateway_rps']:.1f},{row['n_shed']},"
-          f"{row['n_edge_queued']},{row['peak_fleet_tiles']},"
-          f"{row['widened_ticks']}")
-    print(f"# {row['connections']} async connections pushed "
-          f"{row['delivered']} requests at {row['gateway_rps']:.1f} req/s "
-          f"through a {row['replicas']}-replica fleet; edge shed "
-          f"{row['n_shed']} (retried {row['shed_retries']}), parked "
-          f"{row['n_edge_queued']}, fleet depth peaked at "
-          f"{row['peak_fleet_tiles']}/{row['max_fleet_tiles']} tiles "
-          f"(window x{row['widen_factor']:g} while scaling); "
-          f"{row['parity_checked']} results oracle-checked")
+    if args.loopback:
+        row, stats = run_loopback_study(args)
+        print("connections,replicas,devices,codec,loopback_rps,"
+              "inproc_rps,framing_tax,wire_frames_in,wire_bytes_out")
+        print(f"{row['connections']},{row['replicas']},{row['devices']},"
+              f"{row['codec']},{row['loopback_rps']:.1f},"
+              f"{row['inproc_rps']:.1f},{row['framing_tax']:.2f},"
+              f"{row['wire_frames_in']},{row['wire_bytes_out']}")
+        print(f"# {row['connections']} socket clients pushed "
+              f"{row['delivered']} requests at {row['loopback_rps']:.1f} "
+              f"req/s over 127.0.0.1 ({row['codec']} frames, "
+              f"{row['wire_bytes_in'] + row['wire_bytes_out']} wire "
+              f"bytes); framing tax x{row['framing_tax']:.2f} vs "
+              f"{row['inproc_rps']:.1f} req/s in-process; edge shed "
+              f"{row['n_shed']} (retried {row['shed_retries']}); "
+              f"{row['parity_checked']} results oracle-checked")
+    else:
+        row, stats = run_study(args)
+        print("connections,replicas,devices,gateway_rps,n_shed,"
+              "n_edge_queued,peak_fleet_tiles,widened_ticks")
+        print(f"{row['connections']},{row['replicas']},{row['devices']},"
+              f"{row['gateway_rps']:.1f},{row['n_shed']},"
+              f"{row['n_edge_queued']},{row['peak_fleet_tiles']},"
+              f"{row['widened_ticks']}")
+        print(f"# {row['connections']} async connections pushed "
+              f"{row['delivered']} requests at {row['gateway_rps']:.1f} "
+              f"req/s through a {row['replicas']}-replica fleet; edge "
+              f"shed {row['n_shed']} (retried {row['shed_retries']}), "
+              f"parked {row['n_edge_queued']}, fleet depth peaked at "
+              f"{row['peak_fleet_tiles']}/{row['max_fleet_tiles']} tiles "
+              f"(window x{row['widen_factor']:g} while scaling); "
+              f"{row['parity_checked']} results oracle-checked")
 
     if args.json_path:
         os.makedirs(os.path.dirname(args.json_path) or ".",
@@ -299,6 +429,11 @@ def main(argv=None) -> int:
     assert row["n_shed"] + row["n_edge_queued"] >= 1, (
         "the overload probe saturated the edge but it never shed or "
         "parked", row)
+    if args.loopback:
+        assert row["wire_rejects"] == 0, (
+            "well-formed clients must never trip the server's frame "
+            "rejection path", row["wire_rejects"])
+        assert row["framing_tax"] > 0.0, row
     return 0
 
 

@@ -85,9 +85,13 @@ import numpy as np
 from repro.sched import AdmissionControl, AutoPump
 
 __all__ = [
-    "GatewayClosedError", "GatewayConnection", "GatewayError",
-    "GatewayOverloadedError", "OverlayGateway",
+    "DEFAULT_RETRY_AFTER", "GatewayClosedError", "GatewayConnection",
+    "GatewayError", "GatewayOverloadedError", "OverlayGateway",
 ]
+
+#: fallback resubmission hint (seconds) when the pump's poll interval is
+#: unavailable — the pump stopped, or its interval is unset/invalid
+DEFAULT_RETRY_AFTER = 0.05
 
 
 class GatewayError(RuntimeError):
@@ -150,6 +154,7 @@ class OverlayGateway:
     def __init__(self, server, *, max_fleet_tiles: int | None = 256,
                  widen_factor: float = 2.0, overflow: str = "wait",
                  max_edge_waiters: int = 4096,
+                 max_orphan_sessions: int | None = 1024,
                  admission: dict | None = None,
                  default_admission: tuple | None = None,
                  poll_interval: float = 0.002, clock=time.monotonic,
@@ -164,6 +169,10 @@ class OverlayGateway:
             raise ValueError(
                 f"max_fleet_tiles must be >= 1 or None, got "
                 f"{max_fleet_tiles}")
+        if max_orphan_sessions is not None and max_orphan_sessions < 1:
+            raise ValueError(
+                f"max_orphan_sessions must be >= 1 or None, got "
+                f"{max_orphan_sessions}")
         if isinstance(server, AutoPump):
             self._pump = server
             self._owns_pump = False
@@ -174,6 +183,7 @@ class OverlayGateway:
         self.widen_factor = widen_factor
         self.overflow = overflow
         self.max_edge_waiters = max_edge_waiters
+        self.max_orphan_sessions = max_orphan_sessions
         self.clock = clock
         #: per-connection admission spec (each connect() builds its own
         #: AdmissionControl from this, so buckets are per connection)
@@ -184,8 +194,11 @@ class OverlayGateway:
         #: fleet ticket -> owning connection (live awaits only)
         self._outstanding: dict[int, GatewayConnection] = {}
         #: session id -> {fleet tickets} of disconnected-but-undelivered
-        #: (or unclaimed) work, reclaimable exactly once on reconnect
-        self._orphan_sessions: dict[str, set[int]] = {}
+        #: (or unclaimed) work, reclaimable exactly once on reconnect.
+        #: Ordered least- to most-recently-parked so a session that never
+        #: reconnects can be LRU-expired at ``max_orphan_sessions``.
+        self._orphan_sessions: collections.OrderedDict[str, set[int]] = \
+            collections.OrderedDict()
         #: results the gateway had ALREADY claimed from the engine into a
         #: future when the connection dropped before awaiting them; held
         #: here (engine-side claim-once already spent) until reclaimed
@@ -255,6 +268,11 @@ class OverlayGateway:
     @property
     def n_widened_ticks(self) -> int:
         return int(self.telemetry.counter("edge.widened_ticks"))
+
+    @property
+    def n_orphans_expired(self) -> int:
+        """Sessions LRU-expired from the orphan store (never reclaimed)."""
+        return int(self.telemetry.counter("edge.orphans_expired"))
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -398,6 +416,24 @@ class OverlayGateway:
         self.telemetry.peak("edge.peak_fleet_tiles", depth)
         return depth + cost <= self._edge_bound()
 
+    def _retry_after(self) -> float:
+        """Resubmission hint for a shed: one pump poll interval — the
+        soonest the pressure reading can change — snapshotted
+        defensively.  A stopped/replaced pump, or an unset/invalid
+        interval, must not leak ``None``/``inf``/stale garbage into a
+        client-facing hint; those fall back to
+        :data:`DEFAULT_RETRY_AFTER`."""
+        pump = self._pump
+        try:
+            if getattr(pump, "closed", False):
+                return DEFAULT_RETRY_AFTER
+            interval = float(pump.poll_interval)
+        except (AttributeError, TypeError, ValueError):
+            return DEFAULT_RETRY_AFTER
+        if not (0.0 < interval < float("inf")):
+            return DEFAULT_RETRY_AFTER
+        return interval
+
     # ---------------------------------------------------------- pump bridge
     def _on_pump_tick(self, worked: bool) -> None:
         """Pump-thread side of the bridge: schedule (at most) one _tick
@@ -491,7 +527,7 @@ class OverlayGateway:
                     f"fleet depth {self.fleet_pending_tiles} + {cost} "
                     f"tiles exceeds edge bound {self._edge_bound():.0f} "
                     f"(window {self.window:g})",
-                    retry_after=self._pump.poll_interval)
+                    retry_after=self._retry_after())
             waiter = _EdgeWaiter(
                 future=asyncio.get_running_loop().create_future(),
                 conn=conn, kernel=kernel, xs=xs, cost=cost)
@@ -570,8 +606,47 @@ class OverlayGateway:
         for t in tickets:
             self._outstanding.pop(t, None)
         if conn.session is not None and tickets:
-            self._orphan_sessions.setdefault(conn.session,
-                                             set()).update(tickets)
+            self._park_tickets(conn.session, tickets)
+
+    def _park_tickets(self, session: str, tickets) -> None:
+        """Add tickets to a session's orphan bucket, LRU-bump it, and
+        expire the coldest sessions past ``max_orphan_sessions``."""
+        bucket = self._orphan_sessions.get(session)
+        if bucket is None:
+            bucket = self._orphan_sessions[session] = set()
+        bucket.update(tickets)
+        self._orphan_sessions.move_to_end(session)
+        self._expire_orphans()
+
+    def park_result(self, session: str | None, ticket: int,
+                    value) -> None:
+        """Park an ALREADY-CLAIMED result under a session so a later
+        ``reclaim`` returns it — the engine-side claim-once is spent, so
+        the gateway carries the value itself.  The socket transport uses
+        this to re-park results a dying connection never acknowledged.
+        No-op for anonymous (``session=None``) connections."""
+        if session is None:
+            return
+        self._orphan_results[ticket] = value
+        self._park_tickets(session, (ticket,))
+
+    def _expire_orphans(self) -> None:
+        """LRU-expire orphan sessions past the cap: a session that never
+        reconnects must not grow ``_orphan_sessions``/``_orphan_results``
+        without bound.  Expired tickets drop their held results too."""
+        cap = self.max_orphan_sessions
+        if cap is None:
+            return
+        while len(self._orphan_sessions) > cap:
+            session, tickets = self._orphan_sessions.popitem(last=False)
+            held = 0
+            for t in tickets:
+                if self._orphan_results.pop(t, None) is not None:
+                    held += 1
+            self.telemetry.inc("edge.orphans_expired")
+            self.telemetry.inc("edge.orphan_tickets_expired", len(tickets))
+            self.telemetry.event("orphans_expired", session=session,
+                                 tickets=len(tickets), held_results=held)
 
     def orphaned_tickets(self, session: str) -> frozenset[int]:
         """Tickets parked under ``session`` (peek; reclaim claims them)."""
@@ -598,6 +673,8 @@ class OverlayGateway:
              "orphaned_tickets": sum(
                  len(v) for v in self._orphan_sessions.values()),
              "orphaned_results_held": len(self._orphan_results),
+             "orphans_expired": self.n_orphans_expired,
+             "max_orphan_sessions": self.max_orphan_sessions,
              "reclaimed": self.n_reclaimed,
              "outstanding": len(self._outstanding)}
         s["fleet"] = self._pump.stats()

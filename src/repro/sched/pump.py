@@ -257,6 +257,13 @@ class AutoPump:
         return s
 
     # ------------------------------------------------------------ shutdown
+    @property
+    def closed(self) -> bool:
+        """True once `close()` was requested; the drain thread is
+        stopping (or stopped) and ``poll_interval`` no longer predicts
+        anything — edge layers fall back to their own retry hints."""
+        return self._stop.is_set()
+
     def close(self, timeout: float = 5.0) -> None:
         """Stop the pump thread (idempotent).  Queued work is kept — drain
         it explicitly (``flush``/``flush_sync``) if needed."""

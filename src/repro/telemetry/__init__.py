@@ -39,6 +39,7 @@ from repro.telemetry.schema import (
     GATEWAY_STATS_KEYS,
     PUMP_STATS_KEYS,
     ROUTER_STATS_KEYS,
+    SOCKET_STATS_KEYS,
     STEAL_STATS_KEYS,
     check_stats,
 )
@@ -57,6 +58,7 @@ __all__ = [
     "GATEWAY_STATS_KEYS",
     "PUMP_STATS_KEYS",
     "ROUTER_STATS_KEYS",
+    "SOCKET_STATS_KEYS",
     "STEAL_STATS_KEYS",
     "AUTOSCALER_STATS_KEYS",
 ]

@@ -64,8 +64,17 @@ GATEWAY_STATS_KEYS = frozenset({
     "edge_park_cancelled", "edge_waiters", "peak_edge_waiters",
     "peak_fleet_tiles", "max_fleet_tiles", "window", "widened_ticks",
     "connections", "connects", "disconnects", "orphan_sessions",
-    "orphaned_tickets", "orphaned_results_held", "reclaimed",
-    "outstanding", "fleet",
+    "orphaned_tickets", "orphaned_results_held", "orphans_expired",
+    "max_orphan_sessions", "reclaimed", "outstanding", "fleet",
+})
+
+# OverlaySocketServer.stats(); ``gateway`` nests the gateway's dict.
+SOCKET_STATS_KEYS = frozenset({
+    "listening", "open_connections", "registered_kernels",
+    "wire_frames_in", "wire_frames_out", "wire_bytes_in",
+    "wire_bytes_out", "wire_handshakes", "wire_registers",
+    "wire_rejects", "wire_connections", "wire_disconnects",
+    "wire_reparked", "gateway",
 })
 
 _KINDS = {
@@ -73,13 +82,15 @@ _KINDS = {
     "fleet": (FLEET_STATS_KEYS | ROUTER_STATS_KEYS,
               STEAL_STATS_KEYS | AUTOSCALER_STATS_KEYS | PUMP_STATS_KEYS),
     "gateway": (GATEWAY_STATS_KEYS, frozenset()),
+    "socket": (SOCKET_STATS_KEYS, frozenset()),
 }
 
 
 def check_stats(kind: str, stats: dict) -> None:
     """Assert ``stats`` matches the schema for ``kind``.
 
-    ``kind`` is ``"engine"``, ``"fleet"``, or ``"gateway"``.  Every
+    ``kind`` is ``"engine"``, ``"fleet"``, ``"gateway"``, or
+    ``"socket"``.  Every
     required key must be present and no key outside required ∪ optional
     may appear; raises ``AssertionError`` naming the drift either way.
     """

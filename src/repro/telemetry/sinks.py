@@ -171,13 +171,24 @@ class JsonlSink:
         self.mem = InMemorySink(clock=clock, max_events=max_events)
         self.clock = clock
         self._wlock = threading.Lock()
+        self._closed = False
         self._f: io.TextIOWrapper | None = open(self.path, "a", encoding="utf-8")
+
+    @property
+    def closed(self) -> bool:
+        """True once `close()` ran; the sink stays readable but writes,
+        `flush()`, and further `close()` calls are no-ops."""
+        return self._closed
 
     def _write(self, rec: dict) -> None:
         line = json.dumps(rec, sort_keys=True, default=str)
         with self._wlock:
-            if self._f is not None:
-                self._f.write(line + "\n")
+            if self._closed or self._f is None:
+                return
+            if self._f.closed:          # handle closed out-of-band
+                self._f = None
+                return
+            self._f.write(line + "\n")
 
     # ------------------------------------------------------------- write
     def inc(self, name: str, value: float = 1.0) -> float:
@@ -222,20 +233,40 @@ class JsonlSink:
                          "counters": counters})
 
     def flush(self) -> None:
+        """Drain Python's buffer and fsync.  A no-op after `close()` —
+        flushing a closed sink must never raise on the dead handle."""
+        if self._closed:
+            return
         self._snapshot_counters()
         with self._wlock:
-            if self._f is not None:
-                self._f.flush()
-                os.fsync(self._f.fileno())
+            self._fsync()
 
     def close(self) -> None:
+        """Snapshot counters, flush, fsync, and close the file.
+        Idempotent: a second `close()` (or a `flush()` after) is a
+        no-op instead of a ``ValueError`` on the closed handle."""
+        if self._closed:
+            return
         self._snapshot_counters()
         with self._wlock:
+            if self._closed:        # lost a close/close race
+                return
+            self._closed = True
+            self._fsync()
             if self._f is not None:
-                self._f.flush()
-                os.fsync(self._f.fileno())
-                self._f.close()
-                self._f = None
+                try:
+                    self._f.close()
+                finally:
+                    self._f = None
+
+    def _fsync(self) -> None:
+        """Flush + fsync the live handle (holding ``_wlock``); tolerates
+        a handle something else closed out from under the sink."""
+        if self._f is None or self._f.closed:
+            self._f = None
+            return
+        self._f.flush()
+        os.fsync(self._f.fileno())
 
 
 class MultiSink:

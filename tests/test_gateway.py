@@ -441,6 +441,98 @@ def test_gateway_binds_to_one_loop(kernels):
     asyncio.run(gw.aclose())
 
 
+# ==================================================== edge lifecycle fixes
+def test_shed_retry_after_is_defensive():
+    """Regression: the shed hint snapshots ``pump.poll_interval`` —
+    a stopped pump or an unset/invalid interval must fall back to
+    ``DEFAULT_RETRY_AFTER``, never leak ``inf``/``None``/stale state
+    into a client-facing hint."""
+    from repro.launch.gateway import DEFAULT_RETRY_AFTER
+    srv = OverlayServer(bank_capacity=4)
+    gw = OverlayGateway(srv, poll_interval=0.003)
+    try:
+        assert gw._retry_after() == pytest.approx(0.003)
+        for bad in (float("inf"), 0.0, -1.0, None, "soon"):
+            gw.pump.poll_interval = bad
+            assert gw._retry_after() == DEFAULT_RETRY_AFTER, bad
+        gw.pump.poll_interval = 0.25
+        assert gw._retry_after() == pytest.approx(0.25)
+    finally:
+        gw.pump.close()
+    # a closed pump no longer predicts anything, whatever its interval
+    assert gw.pump.closed
+    assert gw._retry_after() == DEFAULT_RETRY_AFTER
+
+
+def test_shed_carries_retry_after_hint(kernels):
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlayGateway.local(max_fleet_tiles=1,
+                                        overflow="shed",
+                                        poll_interval=0.004) as gw:
+            async with gw.connect() as conn:
+                await conn.submit(k, _xs(k, 64, 0))
+                with pytest.raises(GatewayOverloadedError) as ei:
+                    await conn.submit(k, _xs(k, 512, 1))
+                assert ei.value.retry_after == pytest.approx(0.004)
+                await gw.flush_sync()
+
+    asyncio.run(main())
+
+
+def test_orphan_sessions_lru_capped():
+    """Regression: sessions that never reclaim must not grow the orphan
+    stores without bound — the coldest session expires past
+    ``max_orphan_sessions``, dropping its held results, counted and
+    evented; re-parking bumps a session to most-recently-used."""
+
+    async def main():
+        async with OverlayGateway.local(max_orphan_sessions=2) as gw:
+            gw._require_loop()
+            gw.park_result("a", 101, ["va"])
+            gw.park_result("b", 102, ["vb"])
+            gw.park_result("a", 103, ["va2"])       # bump a: order b, a
+            gw.park_result("c", 104, ["vc"])        # expires b, not a
+            assert list(gw._orphan_sessions) == ["a", "c"]
+            assert gw.n_orphans_expired == 1
+            assert 102 not in gw._orphan_results    # held value dropped
+            st = gw.stats()
+            assert st["orphans_expired"] == 1
+            assert st["max_orphan_sessions"] == 2
+            evs = gw.telemetry.events("orphans_expired")
+            assert [e["session"] for e in evs] == ["b"]
+            assert evs[0]["tickets"] == 1 and evs[0]["held_results"] == 1
+            # the expired session reclaims nothing; survivors reclaim
+            # everything they parked
+            async with gw.connect(session="b") as rb:
+                assert await rb.reclaim() == {}
+            async with gw.connect(session="a") as ra:
+                got = await ra.reclaim()
+            assert {t: v for t, v in got.items()} == {101: ["va"],
+                                                      103: ["va2"]}
+            # anonymous connections never park
+            gw.park_result(None, 105, ["anon"])
+            assert 105 not in gw._orphan_results
+
+    asyncio.run(main())
+
+
+def test_orphan_cap_none_disables_expiry():
+    async def main():
+        async with OverlayGateway.local(max_orphan_sessions=None) as gw:
+            gw._require_loop()
+            for i in range(64):
+                gw.park_result(f"s{i}", 1000 + i, ["v"])
+            assert len(gw._orphan_sessions) == 64
+            assert gw.n_orphans_expired == 0
+
+    asyncio.run(main())
+    with pytest.raises(ValueError):
+        OverlayGateway(OverlayServer(bank_capacity=4),
+                       max_orphan_sessions=0)
+
+
 # ================================================================== soak
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_gateway_churn_soak(kernels, seed):

@@ -1,0 +1,423 @@
+"""Socket transport: handshake, register-once, error mapping, reclaim,
+and the 4-seed loopback churn soak.
+
+Everything runs over REAL sockets on 127.0.0.1 (ephemeral ports), in
+four layers:
+
+* PLUMBING — submit/await and ``flush_sync`` through a
+  ``RemoteOverlayClient`` are bit-identical to the single-bank barrier
+  oracle; kernels register ONCE server-wide (the second client's first
+  submit ships only the key).
+* PROTOCOL — a hello from another protocol generation is refused with a
+  ``version`` error (and the client surfaces
+  :class:`ProtocolVersionError`); unregistered keys, digest-mismatched
+  registrations, and over-cap frames are rejected with typed error
+  frames and counted as ``wire.rejects``.
+* ERROR MAPPING — server-side ``GatewayOverloadedError`` (with its
+  ``retry_after`` hint) and ``AdmissionError`` cross the wire and
+  re-raise as the same exception types client-side.
+* SOAK — 4 seeds of connect/drop/reclaim churn over an autoscaled
+  sharded fleet with forced grow/drain: every ticket ever admitted is
+  delivered exactly-or-at-least once (await, reclaim, or barrier),
+  bit-identical to the oracle — zero ticket loss over a real wire.
+
+Tests drive their own ``asyncio.run``; no async pytest plugin.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.overlay import compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.launch.gateway import GatewayOverloadedError, OverlayGateway
+from repro.launch.serve import OverlayServer, ShardedOverlayServer
+from repro.launch.socket_gateway import (OverlaySocketServer,
+                                         RemoteOverlayClient, dfg_from_wire,
+                                         dfg_to_wire)
+from repro.launch.transport import (PROTOCOL_VERSION, ProtocolVersionError,
+                                    read_frame, write_frame)
+from repro.sched import AdmissionError, PressureAutoscaler
+
+ALL_NAMES = BENCH_NAMES + ("gradient",)
+
+
+@pytest.fixture(scope="module")
+def kernels():
+    return {n: compile_program(benchmark(n)) for n in ALL_NAMES}
+
+
+def _xs(kernel, batch, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.uniform(-2, 2, (batch,)).astype(np.float32)
+            for _ in kernel.dfg.inputs]
+
+
+def _assert_parity(pairs, got, want):
+    assert set(got) >= {gt for gt, _ in pairs}
+    for gt, ot in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+
+
+async def _hello(port, **over):
+    """Open a raw connection and send a (possibly doctored) hello."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    msg = {"type": "hello", "proto": PROTOCOL_VERSION, "tenant": "raw",
+           "session": None, "codecs": ["json"]}
+    msg.update(over)
+    await write_frame(writer, msg, "json")
+    return reader, writer, await read_frame(reader)
+
+
+# ============================================================== plumbing
+def test_socket_submit_flush_parity_and_register_once(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    names = list(kernels)[:4]
+
+    async def main():
+        async with OverlaySocketServer.local(
+                bank_capacity=8, poll_interval=0.001) as srv:
+            pairs = []
+            async with RemoteOverlayClient("127.0.0.1", srv.port,
+                                           tenant="a") as c1:
+                for i, n in enumerate(names * 2):
+                    k = kernels[n]
+                    xs = _xs(k, 64, i)
+                    pairs.append((await c1.submit(k, xs),
+                                  oracle.submit(k, xs)))
+                got = await c1.flush_sync()
+                assert not c1.outstanding
+            regs_after_c1 = srv.stats()["wire_registers"]
+            # second client reuses the server-wide registry: same kernels,
+            # zero new registrations
+            async with RemoteOverlayClient("127.0.0.1", srv.port,
+                                           tenant="b") as c2:
+                for i, n in enumerate(names):
+                    k = kernels[n]
+                    xs = _xs(k, 48, 100 + i)
+                    pairs.append((await c2.submit(k, xs),
+                                  oracle.submit(k, xs)))
+                got.update(await c2.drain())
+            st = srv.stats()
+            assert st["wire_registers"] == regs_after_c1 == len(names)
+            assert st["registered_kernels"] == len(names)
+            assert st["wire_rejects"] == 0
+            return got, pairs
+
+    got, pairs = asyncio.run(main())
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+def test_streaming_results_over_socket(kernels):
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlaySocketServer.local(poll_interval=0.001) as srv:
+            async with RemoteOverlayClient("127.0.0.1", srv.port) as c:
+                tickets = [await c.submit(k, _xs(k, 64, i))
+                           for i in range(6)]
+                seen = [t async for t, _ in c.results()]
+                assert sorted(seen) == sorted(tickets)
+                assert not c.outstanding
+
+    asyncio.run(main())
+
+
+# ============================================================== protocol
+def test_version_mismatch_refused():
+    async def main():
+        async with OverlaySocketServer.local() as srv:
+            _, writer, resp = await _hello(srv.port, proto=99)
+            assert resp["type"] == "error" and resp["kind"] == "version"
+            assert "99" in resp["message"]
+            writer.close()
+            assert srv.stats()["wire_rejects"] == 1
+            assert srv.stats()["wire_handshakes"] == 0
+
+    asyncio.run(main())
+
+
+def test_frame_level_version_mismatch_refused():
+    from repro.launch import transport as tp
+
+    async def main():
+        async with OverlaySocketServer.local() as srv:
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           srv.port)
+            # a frame stamped with a future protocol generation
+            writer.write(tp._HEADER.pack(tp.MAGIC, PROTOCOL_VERSION + 1,
+                                         tp._CODEC_IDS["json"], 2) + b"{}")
+            await writer.drain()
+            resp = await read_frame(reader)
+            assert resp["type"] == "error" and resp["kind"] == "version"
+            writer.close()
+
+    asyncio.run(main())
+
+
+def test_client_raises_protocol_version_error():
+    """A server-side version refusal surfaces client-side as the same
+    exception type the codec uses locally."""
+
+    async def refuse(reader, writer):
+        await read_frame(reader)
+        await write_frame(writer, {"type": "error", "kind": "version",
+                                   "message": "server speaks v99"}, "json")
+        writer.close()
+
+    async def main():
+        server = await asyncio.start_server(refuse, "127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+        try:
+            with pytest.raises(ProtocolVersionError, match="v99"):
+                await RemoteOverlayClient("127.0.0.1", port).connect()
+        finally:
+            server.close()
+            await server.wait_closed()
+
+    asyncio.run(main())
+
+
+def test_unregistered_key_rejected():
+    async def main():
+        async with OverlaySocketServer.local() as srv:
+            reader, writer, welcome = await _hello(srv.port)
+            assert welcome["type"] == "welcome"
+            await write_frame(writer, {"type": "submit", "req": 0,
+                                       "key": ["ghost", "0" * 40],
+                                       "xs": []}, "json")
+            resp = await read_frame(reader)
+            assert resp["type"] == "error"
+            assert resp["kind"] == "unregistered" and resp["req"] == 0
+            writer.close()
+            assert srv.stats()["wire_rejects"] == 1
+
+    asyncio.run(main())
+
+
+def test_digest_mismatch_registration_refused(kernels):
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlaySocketServer.local() as srv:
+            reader, writer, _ = await _hello(srv.port)
+            await write_frame(writer, {
+                "type": "register", "req": 7,
+                "key": [k.dfg.name, "f" * 40],       # wrong digest
+                "dfg": dfg_to_wire(k.dfg)}, "json")
+            resp = await read_frame(reader)
+            assert resp["type"] == "error"
+            assert resp["kind"] == "key_mismatch" and resp["req"] == 7
+            writer.close()
+            st = srv.stats()
+            assert st["wire_rejects"] == 1
+            assert st["registered_kernels"] == 0    # nothing cached
+
+    asyncio.run(main())
+
+
+def test_oversized_frame_dropped():
+    async def main():
+        gw = OverlayGateway.local()
+        async with gw:
+            async with OverlaySocketServer(gw, max_frame_bytes=512) as srv:
+                reader, writer, welcome = await _hello(srv.port)
+                assert welcome["type"] == "welcome"
+                await write_frame(writer, {"type": "submit", "req": 0,
+                                           "key": ["k", "d"],
+                                           "pad": "x" * 4096}, "json")
+                resp = await read_frame(reader)
+                assert resp["type"] == "error"
+                assert resp["kind"] == "malformed"
+                assert await read_frame(reader) is None     # dropped
+                writer.close()
+                assert srv.stats()["wire_rejects"] == 1
+
+    asyncio.run(main())
+
+
+def test_dfg_wire_roundtrip(kernels):
+    for k in kernels.values():
+        d2 = dfg_from_wire(dfg_to_wire(k.dfg))
+        assert d2.name == k.dfg.name
+        assert list(d2.inputs) == list(k.dfg.inputs)
+        assert list(d2.outputs) == list(k.dfg.outputs)
+        from repro.core.bank import context_key
+        assert context_key(compile_program(d2)) == context_key(k)
+
+
+# ========================================================== error mapping
+def test_overload_shed_maps_with_retry_after(kernels):
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlaySocketServer.local(
+                max_fleet_tiles=1, overflow="shed",
+                poll_interval=0.001) as srv:
+            async with RemoteOverlayClient("127.0.0.1", srv.port) as c:
+                sheds = 0
+                for i in range(6):
+                    try:
+                        await c.submit(k, _xs(k, 512, i))    # 4 tiles
+                    except GatewayOverloadedError as e:
+                        sheds += 1
+                        assert e.retry_after > 0
+                assert sheds >= 1
+                await c.flush_sync()
+
+    asyncio.run(main())
+
+
+def test_admission_error_maps(kernels):
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlaySocketServer.local(
+                admission={"limited": (0.0001, 1)},
+                poll_interval=0.001) as srv:
+            async with RemoteOverlayClient("127.0.0.1", srv.port,
+                                           tenant="limited") as c:
+                await c.submit(k, _xs(k, 64, 0))     # burst of 1
+                with pytest.raises(AdmissionError) as ei:
+                    await c.submit(k, _xs(k, 64, 1))
+                assert ei.value.tenant == "limited"
+                await c.flush_sync()
+
+    asyncio.run(main())
+
+
+# ================================================================ reclaim
+def test_drop_and_reclaim_over_socket(kernels):
+    oracle = OverlayServer(bank_capacity=16)
+    k = kernels["mibench"]
+
+    async def main():
+        async with OverlaySocketServer.local(poll_interval=0.001) as srv:
+            c1 = await RemoteOverlayClient("127.0.0.1", srv.port,
+                                           session="s-1").connect()
+            pairs = []
+            for i in range(5):
+                xs = _xs(k, 64, i)
+                pairs.append((await c1.submit(k, xs), oracle.submit(k, xs)))
+            await c1.aclose()                   # dropped with work in flight
+            await asyncio.sleep(0.05)           # pump keeps delivering
+            c2 = await RemoteOverlayClient("127.0.0.1", srv.port,
+                                           session="s-1").connect()
+            got = await c2.reclaim()
+            assert await c2.reclaim() == {}     # exactly once
+            await c2.aclose()
+            gw_stats = srv.stats()["gateway"]
+            assert gw_stats["orphan_sessions"] == 0
+            assert gw_stats["orphaned_results_held"] == 0
+            return got, pairs
+
+    got, pairs = asyncio.run(main())
+    assert set(got) == {t for t, _ in pairs}
+    _assert_parity(pairs, got, oracle.flush_sync())
+
+
+# =================================================================== soak
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_loopback_churn_soak(kernels, seed):
+    """Connect/drop/reclaim churn over real loopback sockets against an
+    elastic fleet with forced grow/drain: zero ticket loss, bit parity
+    vs the single-bank oracle."""
+    rng = np.random.RandomState(seed)
+    oracle = OverlayServer(bank_capacity=16)
+    srv = ShardedOverlayServer(
+        n_replicas=1, bank_capacity=4, round_kernels=2,
+        autoscaler=PressureAutoscaler(up_tiles=8, up_rounds=2,
+                                      down_rounds=20, max_replicas=3))
+    names = list(kernels)
+
+    async def main():
+        got, pairs, dropped = {}, [], []
+        async with OverlayGateway(srv, max_fleet_tiles=64,
+                                  overflow="wait",
+                                  poll_interval=0.001) as gw:
+            async with OverlaySocketServer(gw) as sock:
+                req_i = 0
+                for phase in range(5):
+                    clients = [await RemoteOverlayClient(
+                        "127.0.0.1", sock.port, tenant=f"t{i % 3}",
+                        session=f"s{seed}-{phase}-{i}").connect()
+                        for i in range(3)]
+                    for c in clients:
+                        for _ in range(int(rng.randint(2, 5))):
+                            k = kernels[names[req_i % len(names)]]
+                            xs = _xs(k, int(rng.choice((48, 64, 96))),
+                                     seed * 10000 + req_i)
+                            req_i += 1
+                            pairs.append((await c.submit(k, xs),
+                                          oracle.submit(k, xs), c.session))
+                    # forced fleet churn under the pump lock, same as the
+                    # in-process soak: deterministic grow/drain
+                    if phase == 2:
+                        with gw.pump._lock:
+                            srv.add_replica()
+                    if phase == 4 and srv.n_replicas > 1:
+                        with gw.pump._lock:
+                            srv.drain_replica(srv.n_replicas - 1)
+                    for c in clients:
+                        if rng.rand() < 0.4:
+                            got.update(await c.drain())
+                            await c.aclose()
+                        else:           # dropped with work in flight
+                            await c.aclose()
+                            dropped.append(c.session)
+                    if phase == 3:
+                        # a mid-soak barrier through a fresh client: the
+                        # server-side flush claims parked sessions' work
+                        # into the gateway's carry store
+                        async with RemoteOverlayClient(
+                                "127.0.0.1", sock.port) as fc:
+                            await fc.flush_sync()
+                    elif rng.rand() < 0.4:
+                        await asyncio.sleep(0.02)
+                for sid in dropped:
+                    rc = await RemoteOverlayClient(
+                        "127.0.0.1", sock.port, tenant="reclaimer",
+                        session=sid).connect()
+                    got.update(await rc.reclaim())
+                    assert await rc.reclaim() == {}
+                    await rc.aclose()
+                st = sock.stats()
+        return got, pairs, st
+
+    got, pairs, st = asyncio.run(main())
+    assert {t for t, _, _ in pairs} == set(got), "ticket lost or invented"
+    want = oracle.flush_sync()
+    for gt, ot, _ in pairs:
+        for y, w in zip(got[gt], want[ot]):
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(w))
+    gws = st["gateway"]
+    assert gws["orphan_sessions"] == 0
+    assert gws["orphaned_results_held"] == 0
+    assert gws["peak_fleet_tiles"] <= 64 * 2.0      # bound * widen_factor
+    assert st["wire_rejects"] == 0
+    assert st["open_connections"] == 0
+    assert st["registered_kernels"] <= len(kernels)
+
+
+# ================================================================== stats
+def test_socket_stats_schema(kernels):
+    from repro.telemetry import check_stats
+    k = kernels["chebyshev"]
+
+    async def main():
+        async with OverlaySocketServer.local(poll_interval=0.001) as srv:
+            async with RemoteOverlayClient("127.0.0.1", srv.port) as c:
+                await c.submit(k, _xs(k, 64, 0))
+                await c.flush_sync()
+                cs = c.stats()
+                assert cs["codec"] in ("json", "msgpack")
+                assert cs["delivered"] == 1
+            st = srv.stats()
+            check_stats("socket", st)
+            check_stats("gateway", st["gateway"])
+            assert st["wire_frames_in"] > 0 and st["wire_bytes_out"] > 0
+            assert st["wire_handshakes"] == 1
+
+    asyncio.run(main())

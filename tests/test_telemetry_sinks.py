@@ -126,6 +126,36 @@ def test_jsonl_round_trip(tmp_path):
             json.loads(line)
 
 
+def test_jsonl_close_and_flush_are_idempotent(tmp_path):
+    """Regression: flush()/close() after close() must be no-ops, never a
+    ValueError on the dead handle — shutdown paths routinely close a
+    shared sink from more than one layer."""
+    path = tmp_path / "idem.jsonl"
+    s = JsonlSink(path, clock=lambda: 0.0)
+    s.inc("edge.shed", 3.0)
+    s.event("shed", tenant="a")
+    s.close()
+    assert s.closed
+    n_lines = len(read_jsonl(path))
+    s.close()                                 # all no-ops from here on
+    s.flush()
+    s.close()
+    assert len(read_jsonl(path)) == n_lines   # no extra snapshots
+    # writes post-close are dropped on the floor, but reads stay live
+    s.event("late", tenant="b")
+    s.log_step(1, tiles=2)
+    assert s.counter("edge.shed") == 3.0
+    assert len(read_jsonl(path)) == n_lines
+    # a handle closed OUT-OF-BAND (crash cleanup, GC order) must not
+    # break flush/close either
+    s2 = JsonlSink(tmp_path / "oob.jsonl")
+    s2.inc("x", 1.0)
+    s2._f.close()
+    s2.flush()
+    s2.close()
+    assert s2.closed
+
+
 def test_jsonl_counter_reads_stay_in_memory(tmp_path):
     path = tmp_path / "hot.jsonl"
     s = JsonlSink(path)

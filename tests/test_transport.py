@@ -1,0 +1,249 @@
+"""Frame codec: property round trips, rejection, and stream adaptation.
+
+Three layers:
+
+* ROUND TRIP — property tests (hypothesis shim) over random nested
+  messages with embedded ndarrays: every codec must reproduce the
+  message exactly, arrays BIT-FOR-BIT (the loopback soak's oracle
+  parity rides on this), and ``decode_frame`` must report the exact
+  frame length so frames can be parsed back-to-back from one buffer.
+* REJECTION — truncation at every prefix length, declared lengths past
+  the size cap (refused before any payload is read), garbage magic,
+  unknown codec ids, undecodable payloads, and version-mismatched
+  headers each raise their own typed error; nothing is "best-effort
+  parsed".
+* STREAMS — ``read_frame``/``write_frame`` against a fed
+  ``StreamReader``: clean EOF between frames is ``None``, EOF inside a
+  frame is :class:`TruncatedFrameError`, and the ``on_bytes`` hook sees
+  exactly header + payload.
+
+Tests drive their own ``asyncio.run``; no async pytest plugin.
+"""
+
+import asyncio
+import struct
+
+import numpy as np
+import pytest
+
+from repro.launch import transport
+from repro.launch.transport import (CODECS, HEADER_BYTES,
+                                    FrameTooLargeError, MalformedFrameError,
+                                    PROTOCOL_VERSION, ProtocolVersionError,
+                                    TruncatedFrameError, decode_frame,
+                                    default_codec, encode_frame, read_frame,
+                                    write_frame)
+from repro.testing import given, settings, st
+
+DTYPES = ("float32", "float64", "int32", "uint8")
+
+
+def _random_message(seed: int) -> dict:
+    """A random nested message shaped like real gateway traffic."""
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(1, 4))
+    xs = [rng.uniform(-100, 100,
+                      size=tuple(rng.randint(1, 5,
+                                             size=int(rng.randint(1, 3)))))
+          .astype(DTYPES[int(rng.randint(len(DTYPES)))]) for _ in range(n)]
+    return {
+        "type": "submit", "req": int(rng.randint(0, 2 ** 31)),
+        "key": ["kernel", "a" * 40],
+        "xs": xs,
+        "meta": {"nested": [1, 2.5, "s", None, True],
+                 "empty": [], "flag": bool(rng.randint(2))},
+    }
+
+
+def _assert_same(a, b):
+    assert type(a) is type(b) or (isinstance(a, (list, tuple))
+                                  and isinstance(b, (list, tuple)))
+    if isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_same(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_same(x, y)
+    elif isinstance(a, np.ndarray):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    else:
+        assert a == b
+
+
+# ============================================================= round trip
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from(CODECS))
+def test_roundtrip_property(seed, codec):
+    msg = _random_message(seed)
+    frame = encode_frame(msg, codec)
+    out, consumed = decode_frame(frame)
+    assert consumed == len(frame)
+    _assert_same(msg, out)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_back_to_back_frames(seed):
+    """bytes_consumed lets a buffer consumer parse concatenated frames."""
+    msgs = [_random_message(seed), {"type": "flush", "req": seed},
+            _random_message(seed + 1)]
+    buf = b"".join(encode_frame(m) for m in msgs)
+    off = 0
+    for want in msgs:
+        got, used = decode_frame(buf[off:])
+        _assert_same(want, got)
+        off += used
+    assert off == len(buf)
+
+
+def test_array_bit_exactness_all_dtypes():
+    """Raw-bytes carriage: NaNs, -0.0, denormals survive both codecs."""
+    arrs = [np.array([0.0, -0.0, np.nan, np.inf, -np.inf, 1e-45],
+                     dtype=np.float32),
+            np.array([[1, -2], [2 ** 31 - 1, -2 ** 31]], dtype=np.int32),
+            np.arange(12, dtype=np.float64).reshape(3, 4) * np.pi]
+    for codec in CODECS:
+        out, _ = decode_frame(encode_frame({"xs": arrs}, codec))
+        for a, b in zip(arrs, out["xs"]):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+
+def test_default_codec_is_supported():
+    assert default_codec() in CODECS
+    assert "json" in CODECS             # the always-available fallback
+
+
+# ============================================================== rejection
+def test_truncated_at_every_prefix():
+    frame = encode_frame({"type": "hello", "n": 7}, "json")
+    for cut in range(len(frame)):
+        with pytest.raises(TruncatedFrameError):
+            decode_frame(frame[:cut])
+    # TruncatedFrameError IS a MalformedFrameError (one except clause
+    # catches both for consumers that don't care which)
+    assert issubclass(TruncatedFrameError, MalformedFrameError)
+
+
+def test_oversized_rejected_both_directions():
+    big = {"xs": [np.zeros(4096, dtype=np.float32)]}
+    with pytest.raises(FrameTooLargeError):
+        encode_frame(big, "json", max_bytes=64)
+    frame = encode_frame(big, "json")
+    with pytest.raises(FrameTooLargeError):
+        decode_frame(frame, max_bytes=64)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_garbage_rejected(seed):
+    rng = np.random.RandomState(seed)
+    junk = rng.bytes(int(rng.randint(HEADER_BYTES, 64)))
+    if junk[:2] == transport.MAGIC:     # astronomically unlikely; skip
+        return
+    with pytest.raises(MalformedFrameError):
+        decode_frame(junk)
+
+
+def test_undecodable_payload_rejected():
+    frame = transport._HEADER.pack(transport.MAGIC, PROTOCOL_VERSION,
+                                   transport._CODEC_IDS["json"], 4) \
+        + b"\xff\xfe\x00{"
+    with pytest.raises(MalformedFrameError):
+        decode_frame(frame)
+
+
+def test_unknown_codec_id_rejected():
+    frame = transport._HEADER.pack(transport.MAGIC, PROTOCOL_VERSION,
+                                   250, 2) + b"{}"
+    with pytest.raises(MalformedFrameError):
+        decode_frame(frame)
+    with pytest.raises(MalformedFrameError):
+        encode_frame({}, "pickle")      # never, ever
+
+
+def test_version_mismatch_rejected():
+    frame = transport._HEADER.pack(transport.MAGIC, PROTOCOL_VERSION + 1,
+                                   transport._CODEC_IDS["json"], 2) + b"{}"
+    with pytest.raises(ProtocolVersionError):
+        decode_frame(frame)
+
+
+def test_header_layout_frozen():
+    """The on-wire header is a compatibility contract: 8 bytes, magic +
+    version + codec + big-endian length."""
+    assert HEADER_BYTES == 8
+    frame = encode_frame({}, "json")
+    magic, version, codec_id, length = struct.unpack(">2sBBI",
+                                                     frame[:HEADER_BYTES])
+    assert magic == transport.MAGIC
+    assert version == PROTOCOL_VERSION
+    assert length == len(frame) - HEADER_BYTES
+
+
+# ================================================================ streams
+def _feed_reader(data: bytes) -> asyncio.StreamReader:
+    r = asyncio.StreamReader()
+    r.feed_data(data)
+    r.feed_eof()
+    return r
+
+
+def test_read_frame_stream_roundtrip_and_eof():
+    msgs = [{"type": "a", "i": 1}, {"type": "b",
+                                    "x": np.ones(3, dtype=np.float32)}]
+
+    async def main():
+        r = _feed_reader(b"".join(encode_frame(m) for m in msgs))
+        sizes = []
+        out = [await read_frame(r, on_bytes=sizes.append),
+               await read_frame(r, on_bytes=sizes.append)]
+        assert await read_frame(r) is None          # clean EOF
+        assert sizes == [len(encode_frame(m)) for m in msgs]
+        return out
+
+    out = asyncio.run(main())
+    _assert_same(msgs[0], out[0])
+    np.testing.assert_array_equal(out[1]["x"], msgs[1]["x"])
+
+
+def test_read_frame_stream_truncation_and_cap():
+    frame = encode_frame({"type": "a", "pad": "x" * 100}, "json")
+
+    async def truncated():
+        with pytest.raises(TruncatedFrameError):
+            await read_frame(_feed_reader(frame[:HEADER_BYTES + 10]))
+        with pytest.raises(TruncatedFrameError):
+            await read_frame(_feed_reader(frame[:3]))
+
+    async def over_cap():
+        with pytest.raises(FrameTooLargeError):
+            await read_frame(_feed_reader(frame), max_bytes=16)
+
+    asyncio.run(truncated())
+    asyncio.run(over_cap())
+
+
+def test_write_frame_counts_bytes():
+    async def main():
+        r = asyncio.StreamReader()
+
+        class _W:                        # minimal StreamWriter stand-in
+            def write(self, b):
+                r.feed_data(b)
+
+            async def drain(self):
+                pass
+
+        msg = {"type": "result", "ys": [np.ones(8, dtype=np.float32)]}
+        n = await write_frame(_W(), msg)
+        r.feed_eof()
+        got = await read_frame(r)
+        assert n == len(encode_frame(msg))
+        np.testing.assert_array_equal(got["ys"][0], msg["ys"][0])
+
+    asyncio.run(main())

@@ -55,6 +55,9 @@ METRICS = {
     "gateway": ("gateway_rps",
                 ("connections", "replicas", "n_shed", "n_edge_queued",
                  "peak_fleet_tiles")),
+    "loopback": ("loopback_rps",
+                 ("connections", "codec", "framing_tax", "inproc_rps",
+                  "wire_frames_in", "wire_bytes_out")),
     "slo": ("slo_attainment",
             ("latency_p99_ms", "bulk_p99_ms", "flat_latency_p99_ms",
              "policy", "quantum_tiles", "lat_quantum", "configs")),
