@@ -1,0 +1,253 @@
+"""Hot-path anatomy: paired legacy-vs-arena study of the round pipeline.
+
+The device launch of a serving round is ONE fused executable; everything
+else a round pays is host-side copying around it — the "overlay tax" that
+dominates when contexts are cheap (cf. the JIT-assembly overlay line,
+arXiv:1603.01187).  PR 9 rebuilt that host half zero-copy:
+
+* ``assemble``: single-pass scatter into a pooled ``RoundArena`` block
+  (vs the seed's per-group ``np.zeros`` + ``np.concatenate`` +
+  ``reshape().transpose()`` copies, kept as ``assemble_reference``);
+* ``execute``: batch already device-resident (no redundant
+  ``device_put``), tile stack DONATED to the executable;
+* ``collect``: live tiles/rows sliced device-side, one transfer,
+  per-request numpy views (vs ``collect_reference``'s full padded
+  readback + per-row ``ascontiguousarray`` copies).
+
+This study times the two arms STAGE BY STAGE on identical workloads and
+enforces the PR's acceptance bar:
+
+* the arena path strictly beats the legacy path on the combined
+  assemble+collect wall at tile=128, G >= 32 (``--tolerance`` adds CI
+  jitter slack);
+* ZERO executable retraces after warmup (cache sizes of
+  ``vm_exec_multi``/``vm_exec_multi_donated``/``_gather_live`` frozen);
+* bit parity vs the ``dispatch`` oracle on every measured round.
+
+Headline metric ``hotpath_rps`` (engine-level flush throughput through
+the arena+donation pipeline) feeds ``tools/bench_trajectory.py``.
+
+Run: PYTHONPATH=src python -m benchmarks.hot_path
+     PYTHONPATH=src python -m benchmarks.hot_path --smoke \
+         --json artifacts/bench/hot_path.json --tolerance 0.25
+Reading the output: docs/ARCHITECTURE.md#hot-path-anatomy.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import overlay as overlay_mod
+from repro.core import vm
+from repro.core.arena import RoundArena
+from repro.core.isa import RF_DEPTH
+from repro.core.overlay import Overlay, compile_program
+from repro.core.paper_bench import BENCH_NAMES, benchmark
+from repro.launch.serve import OverlayServer
+
+TILE = 128
+
+
+def _kernels():
+    names = list(BENCH_NAMES) + ["gradient"]
+    return {n: compile_program(benchmark(n)) for n in names}
+
+
+def _workload(kernels, n_requests, req_batch, seed=0):
+    """Mixed-kernel requests; round-robin kernels so groups merge."""
+    rng = np.random.RandomState(seed)
+    names = list(kernels)
+    reqs = []
+    for i in range(n_requests):
+        k = kernels[names[i % len(names)]]
+        reqs.append((k, [rng.uniform(-2, 2, (req_batch,)).astype(np.float32)
+                         for _ in k.dfg.inputs]))
+    return reqs
+
+
+def _bit_equal(got, want):
+    for g, w in zip(got, want):
+        for a, b in zip(g, w):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                return False
+    return True
+
+
+def _cache_sizes():
+    return (vm.vm_exec_multi._cache_size(),
+            vm.vm_exec_multi_donated._cache_size(),
+            overlay_mod._gather_live._cache_size())
+
+
+def paired_stage_study(kernels, n_requests, req_batch, iters):
+    """Time plan/assemble/execute/collect for both arms on one workload."""
+    arena_ov = Overlay(arena=RoundArena(), donate=True)
+    legacy_ov = Overlay()
+    bank = arena_ov.load_many(kernels.values(), capacity=len(kernels))
+    reqs = _workload(kernels, n_requests, req_batch)
+
+    # --- warmup: compile every executable bucket both arms will touch
+    p = arena_ov.plan(bank, reqs, tile=TILE)
+    g_total, g_pad = p.g_total, p.g_pad
+    assert g_total >= 32, (
+        f"study needs G >= 32 live tiles at tile={TILE}, got {g_total}; "
+        f"raise --requests/--req-batch")
+    ys = arena_ov.execute(bank, arena_ov.assemble(p))
+    jax.block_until_ready(ys)
+    arena_ov.collect(p, ys, host=True)
+    p.release(bank)
+    p = legacy_ov.plan(bank, reqs, tile=TILE)
+    ys = legacy_ov.execute(bank, legacy_ov.assemble_reference(p))
+    jax.block_until_ready(ys)
+    legacy_ov.collect_reference(p, ys, host=True)
+
+    # --- oracle parity: the zero-copy pipeline vs the dispatch oracle
+    oracle = legacy_ov.dispatch(bank, reqs, tile=TILE)
+    p = arena_ov.plan(bank, reqs, tile=TILE)
+    ys = arena_ov.execute(bank, arena_ov.assemble(p))
+    jax.block_until_ready(ys)
+    got = arena_ov.collect(p, ys, host=True)
+    p.release(bank)
+    parity = _bit_equal(got, oracle)
+    assert parity, "arena pipeline diverged from the dispatch oracle"
+
+    caches0 = _cache_sizes()
+    walls = {arm: {"assemble": [], "execute": [], "collect": []}
+             for arm in ("legacy", "arena")}
+    for _ in range(iters):
+        # legacy arm: reference assemble/collect, non-donating execute
+        pl_ = legacy_ov.plan(bank, reqs, tile=TILE)
+        t0 = time.perf_counter()
+        batch = legacy_ov.assemble_reference(pl_)
+        t1 = time.perf_counter()
+        ys = legacy_ov.execute(bank, batch)
+        jax.block_until_ready(ys)
+        t2 = time.perf_counter()
+        legacy_ov.collect_reference(pl_, ys, host=True)
+        t3 = time.perf_counter()
+        walls["legacy"]["assemble"].append(t1 - t0)
+        walls["legacy"]["execute"].append(t2 - t1)
+        walls["legacy"]["collect"].append(t3 - t2)
+
+        # arena arm: pooled scatter, donated execute, live-rows collect
+        pa = arena_ov.plan(bank, reqs, tile=TILE)
+        t0 = time.perf_counter()
+        batch = arena_ov.assemble(pa)
+        t1 = time.perf_counter()
+        ys = arena_ov.execute(bank, batch)
+        jax.block_until_ready(ys)
+        t2 = time.perf_counter()
+        arena_ov.collect(pa, ys, host=True)
+        t3 = time.perf_counter()
+        pa.release(bank)
+        walls["arena"]["assemble"].append(t1 - t0)
+        walls["arena"]["execute"].append(t2 - t1)
+        walls["arena"]["collect"].append(t3 - t2)
+    retraces = sum(b - a for a, b in zip(caches0, _cache_sizes()))
+
+    med = {arm: {st: float(np.median(ts)) for st, ts in stages.items()}
+           for arm, stages in walls.items()}
+    stack_bytes = g_pad * RF_DEPTH * TILE * 4
+    return {
+        "g_total": g_total, "g_pad": g_pad, "tile": TILE,
+        "iters": iters, "parity": parity, "retraces": retraces,
+        "legacy": med["legacy"], "arena": med["arena"],
+        "assemble_speedup": med["legacy"]["assemble"] / med["arena"]["assemble"],
+        "collect_speedup": med["legacy"]["collect"] / med["arena"]["collect"],
+        "stage_speedup": ((med["legacy"]["assemble"] + med["legacy"]["collect"])
+                          / (med["arena"]["assemble"] + med["arena"]["collect"])),
+        "assemble_gbps": stack_bytes / med["arena"]["assemble"] / 1e9,
+        "arena_stats": arena_ov.arena.stats(),
+    }
+
+
+def engine_throughput(kernels, n_requests, req_batch):
+    """Headline: flush throughput through the arena+donation engine."""
+    srv = OverlayServer(bank_capacity=len(kernels), tile=TILE,
+                        round_kernels=max(1, len(kernels) // 2))
+    names = list(kernels)
+    rng = np.random.RandomState(1)
+    def submit_all():
+        for i in range(n_requests):
+            k = kernels[names[i % len(names)]]
+            xs = [rng.uniform(-2, 2, (req_batch,)).astype(np.float32)
+                  for _ in k.dfg.inputs]
+            srv.submit(k, xs)
+    submit_all()
+    srv.flush()                          # warmup: compile the buckets
+    submit_all()
+    t0 = time.perf_counter()
+    srv.flush()
+    wall = time.perf_counter() - t0
+    s = srv.stats()
+    assert s["arena"]["outstanding"] == 0, "engine leaked arena blocks"
+    return n_requests / wall, s["stage_walls"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=42,
+                    help="requests per measured round")
+    ap.add_argument("--req-batch", type=int, default=384,
+                    help="per-request batch length")
+    ap.add_argument("--iters", type=int, default=30,
+                    help="measured repetitions per arm")
+    ap.add_argument("--engine-requests", type=int, default=256,
+                    help="requests for the engine-level rps headline")
+    ap.add_argument("--tolerance", type=float, default=0.0,
+                    help="slack on the arena-beats-legacy assertion: "
+                         "arena wall must be < legacy * (1 + tolerance)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink for CI (keeps G >= 32)")
+    ap.add_argument("--json", dest="json_path", default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = min(args.requests, 21)
+        args.req_batch = 256
+        args.iters = min(args.iters, 8)
+        args.engine_requests = min(args.engine_requests, 96)
+
+    kernels = _kernels()
+    row = paired_stage_study(kernels, args.requests, args.req_batch,
+                             args.iters)
+    rps, stage_walls = engine_throughput(kernels, args.engine_requests,
+                                         args.req_batch)
+    row["hotpath_rps"] = rps
+    row["engine_stage_walls"] = stage_walls
+
+    print(f"# hot path @ tile={row['tile']}  G={row['g_total']} live "
+          f"({row['g_pad']} padded)  iters={row['iters']}")
+    for st in ("assemble", "execute", "collect"):
+        print(f"  {st:>9}: legacy {row['legacy'][st] * 1e3:8.3f} ms   "
+              f"arena {row['arena'][st] * 1e3:8.3f} ms   "
+              f"({row['legacy'][st] / row['arena'][st]:.2f}x)")
+    print(f"  assemble+collect speedup: {row['stage_speedup']:.2f}x   "
+          f"assemble {row['assemble_gbps']:.2f} GB/s")
+    print(f"  retraces after warmup: {row['retraces']}   "
+          f"oracle parity: {row['parity']}")
+    print(f"  hotpath_rps: {row['hotpath_rps']:.1f}")
+
+    # ------------------------------------------------- acceptance gates
+    legacy_wall = row["legacy"]["assemble"] + row["legacy"]["collect"]
+    arena_wall = row["arena"]["assemble"] + row["arena"]["collect"]
+    assert arena_wall < legacy_wall * (1.0 + args.tolerance), (
+        f"arena assemble+collect ({arena_wall * 1e3:.3f} ms) does not beat "
+        f"legacy ({legacy_wall * 1e3:.3f} ms) within tolerance "
+        f"{args.tolerance:.0%}")
+    assert row["retraces"] == 0, (
+        f"{row['retraces']} executable retraces after warmup")
+
+    if args.json_path:
+        os.makedirs(os.path.dirname(args.json_path) or ".", exist_ok=True)
+        with open(args.json_path, "w") as f:
+            json.dump(row, f, indent=1, default=float)
+        print(f"# wrote {args.json_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -156,6 +156,14 @@ class ContextBank:
         self.n_loads = 0
         self.n_evictions = 0
         self.n_hits = 0
+        #: optional RoundArena serving this bank's rounds (attached by the
+        #: engine); surfaced in stats() so a leaking arena bucket shows up
+        #: in telemetry instead of just RSS
+        self._arena = None
+
+    def attach_arena(self, arena) -> None:
+        """Expose a RoundArena's occupancy/recycle counters via stats()."""
+        self._arena = arena
 
     def _place(self, x):
         """Commit an array to this bank's device (default device if None)."""
@@ -403,7 +411,9 @@ class ContextBank:
                 "pinned": self.n_pinned, "generation": self.generation,
                 "ctx_cache": len(self._ctx_cache),
                 "occupancy": len(self) / self.capacity,
-                "pinned_fraction": self.n_pinned / self.capacity}
+                "pinned_fraction": self.n_pinned / self.capacity,
+                "arena": (self._arena.stats()
+                          if self._arena is not None else None)}
 
 
 # ================================================================ directory

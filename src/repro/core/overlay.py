@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict
 from functools import partial
 
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import vm
+from repro.core.arena import ArenaBlock, RoundArena
 from repro.core.bank import (DEFAULT_MAX_OUTPUTS, BankError, ContextBank,
                              context_key)
 from repro.core.dfg import DFG
@@ -90,17 +92,65 @@ class DispatchPlan:
     g_total: int              # live tile rows
     g_pad: int                # pow2-padded tile rows (executable bucket)
     pinned: bool = False
+    arena: RoundArena | None = None   # pool the staging block came from
+    block: ArenaBlock | None = None   # host block owned until release()
 
     @property
     def n_kernels(self) -> int:
         return len(self.groups)
 
     def release(self, bank: ContextBank) -> None:
-        """Drop this plan's eviction pins (no-op for unpinned plans)."""
+        """Drop this plan's eviction pins and recycle its arena block.
+
+        Called exactly once per round after delivery (``collect``); a
+        no-op for unpinned, arena-less plans.  The host staging block is
+        safe to reuse here because ``execute``'s device placement COPIES
+        it — the launch never aliases host memory.
+        """
         if self.pinned:
             self.pinned = False
             for g in self.groups:
                 bank.unpin(g.kernel)
+        if self.arena is not None:
+            self.arena.recycle(self.block)
+            self.arena = None
+            self.block = None
+
+
+@partial(jax.jit, static_argnames=("n_tiles", "n_out"))
+def _gather_live(ys, n_tiles: int, n_out: int):
+    """Device-side live-rows slice + transpose for ``collect(host=True)``.
+
+    Drops the padding tiles and the dead ``max_outputs`` rows BEFORE the
+    host transfer, and moves the output axis outermost so each group's
+    per-output flatten on the host is a contiguous view, not a copy.
+    ``n_tiles`` is bucketed by the caller (multiple of 8, capped at
+    ``g_pad``) so steady traffic reuses a handful of executables.
+    """
+    return jnp.moveaxis(ys[:n_tiles, :n_out, :], 1, 0)
+
+
+def _round_up8(n: int) -> int:
+    return -(-n // 8) * 8
+
+
+def _on_device(arr, device) -> bool:
+    """True when ``arr`` is a jax.Array already resident on ``device``."""
+    sharding = getattr(arr, "sharding", None)
+    return (sharding is not None
+            and getattr(sharding, "device_set", None) == {device})
+
+
+def _host_backed(arr) -> bool:
+    """True when ``arr``'s buffer lives in host memory (numpy, or a
+    jax.Array on CPU devices) — i.e. ``np.asarray`` on it is zero-copy
+    and a device-side gather would only add dispatch latency."""
+    if isinstance(arr, np.ndarray):
+        return True
+    sharding = getattr(arr, "sharding", None)
+    if sharding is None:
+        return False
+    return all(d.platform == "cpu" for d in sharding.device_set)
 
 
 def compile_program(dfg: DFG) -> CompiledKernel:
@@ -119,7 +169,8 @@ class Overlay:
     """A fixed executor for a family of kernels (<= s_max stages)."""
 
     def __init__(self, s_max: int = vm.S_MAX, dtype=jnp.float32,
-                 backend: str = "jnp", device=None):
+                 backend: str = "jnp", device=None,
+                 arena: RoundArena | None = None, donate: bool = False):
         if backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.s_max = s_max
@@ -130,6 +181,18 @@ class Overlay:
         #: (and its ContextBank) so rounds execute where the working set
         #: is resident, never via implicit default-device placement.
         self.device = device
+        #: host staging pool for ``assemble``; None = allocate per round.
+        #: The caller owns the recycle protocol: every assembled plan must
+        #: eventually see ``plan.release(bank)`` (the serving engines do).
+        self.arena = arena
+        #: donate the round's device tile stack to the executor so XLA
+        #: frees/reuses the input allocation instead of holding it until
+        #: the round retires.  Contract: the caller must not touch the
+        #: batch after ``execute`` consumes it (the engines never do).
+        self.donate = donate
+        #: reusable packing scratch for ``assemble`` (grown on demand);
+        #: per-overlay, so concurrent engines never share it.
+        self._scratch: np.ndarray | None = None
 
     # --------------------------------------------------------------- context
     def load(self, kernel: CompiledKernel) -> Context:
@@ -226,7 +289,7 @@ class Overlay:
                             g_total=g_total, g_pad=g_pad, pinned=pin)
 
     def assemble(self, plan: DispatchPlan):
-        """Stage 2/4 — build the round's host tile stack.
+        """Stage 2/4 — build the round's host tile stack (single pass).
 
         Packs every request into ONE ``[G_pad, RF_DEPTH, tile]`` host
         buffer (a single device transfer — the hot serving path must not
@@ -235,11 +298,76 @@ class Overlay:
         replicas of tile 0 so repeated mixed workloads land in a handful
         of executable buckets (zero retraces after warmup).
 
-        Pure host work (numpy): in the async engine this stage runs for
-        round N+1 while round N executes on device.  Returns
-        ``(id_arr, x_stack)`` on device, or ``None`` when the round is
-        all zero-length requests (nothing to launch).
+        Each group's rows are concatenated ONCE into a pooled overlay
+        scratch (``np.concatenate(..., out=)`` — no intermediate
+        allocation) and stored with a single strided scatter into the
+        group's tile run — the legacy per-group ``np.zeros`` + concat
+        copy + ``reshape().transpose()`` triple pass survives only as
+        ``assemble_reference``, the paired-benchmark baseline.  With
+        ``self.arena`` set the destination is a recycled pool block
+        (scrubbed to its dirty high-water mark, so contents are
+        bit-identical to a fresh zeros) that ``plan.release(bank)``
+        returns to the pool.
+
+        Pure host work (numpy) plus an async device placement: in the
+        async engine this stage runs for round N+1 while round N executes
+        on device.  Returns ``(id_arr, x_stack)`` — already resident on
+        ``self.device`` when one is pinned, so ``execute`` skips its
+        placement — or ``None`` when the round is all zero-length
+        requests (nothing to launch).
         """
+        if plan.g_total == 0:
+            return None
+        np_dtype = np.dtype(self.dtype)
+        tile = plan.tile
+        if self.arena is not None:
+            if plan.block is not None:       # re-assembled plan: no leak
+                plan.arena.recycle(plan.block)
+            block = self.arena.checkout(plan.g_pad, tile, np_dtype)
+            plan.arena, plan.block = self.arena, block
+            x_np, ids_np = block.x, block.ids
+        else:
+            block = None
+            x_np = np.zeros((plan.g_pad, RF_DEPTH, tile), np_dtype)
+            ids_np = np.zeros(plan.g_pad, np.int32)
+        max_cols = max((g.n_tiles for g in plan.groups), default=0) * tile
+        scratch = self._scratch
+        if (scratch is None or scratch.dtype != np_dtype
+                or scratch.shape[1] < max_cols):
+            scratch = self._scratch = np.empty((RF_DEPTH, max_cols), np_dtype)
+        dirty = 0
+        for g in plan.groups:
+            if g.n_tiles == 0:
+                continue
+            n_in = len(g.kernel.dfg.inputs)
+            dirty = max(dirty, n_in)
+            nt = g.n_tiles
+            buf = scratch[:n_in, :nt * tile]    # [n_in, nt*tile] pooled
+            for j in range(n_in):
+                np.concatenate([np.asarray(plan.requests[i][1][j], np_dtype)
+                                for i in g.idxs], out=buf[j, :g.total])
+            if g.total < nt * tile:
+                buf[:, g.total:] = 0            # zero tail of the last tile
+            # single strided store: row j of the scratch lands in RF row j
+            # of every tile in the group's run
+            x_np[g.start:g.start + nt, :n_in, :] = \
+                buf.reshape(n_in, nt, tile).transpose(1, 0, 2)
+            ids_np[g.start:g.start + g.n_tiles] = g.slot
+        # padding tiles replicate tile 0; only its dirty rows can be
+        # nonzero, so copying those rows is bit-identical to a full copy
+        if plan.g_total < plan.g_pad:
+            x_np[plan.g_total:, :dirty] = x_np[0, :dirty]
+        ids_np[plan.g_total:] = ids_np[0]
+        if block is not None:
+            block.dirty_rows = max(block.dirty_rows, dirty)
+        if self.device is not None:
+            return jax.device_put((ids_np, x_np), self.device)
+        return jnp.asarray(ids_np), jnp.asarray(x_np)
+
+    def assemble_reference(self, plan: DispatchPlan):
+        """The seed's copy-heavy assemble, kept verbatim as the paired
+        baseline for ``benchmarks/hot_path.py`` and the bit-parity tests
+        (``assemble`` must reproduce this buffer exactly)."""
         if plan.g_total == 0:
             return None
         np_dtype = np.dtype(self.dtype)
@@ -281,13 +409,27 @@ class Overlay:
         # co-locate the round with the bank: a device-pinned bank (sharded
         # replica) must execute where its contexts are resident — mixing a
         # committed bank with default-device inputs is an XLA placement
-        # error, not a transfer
+        # error, not a transfer.  ``assemble`` already places on
+        # ``self.device``, so the placement here only fires for batches
+        # built elsewhere — never a redundant no-op put per round.
         device = getattr(bank, "device", None) or self.device
-        if device is not None:
+        if device is not None and not (_on_device(id_arr, device)
+                                       and _on_device(x_stack, device)):
             id_arr, x_stack = jax.device_put((id_arr, x_stack), device)
         if self.backend == "pallas":
             from repro.kernels.tmfu import ops as tmfu_ops
-            return tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack)
+            return tmfu_ops.tmfu_pipeline_multi(bank, id_arr, x_stack,
+                                                donate=self.donate)
+        if self.donate:
+            # XLA frees (rather than aliases) the donation here: the jnp
+            # executor's [G, max_outputs, tile] result is narrower than
+            # the donated stack, and its lowering warns about the partial
+            # use at every compile — expected, so keep each bucket quiet
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return vm.vm_exec_multi_donated(bank.tree(), bank.out_idx,
+                                                id_arr, x_stack)
         return vm.vm_exec_multi(bank.tree(), bank.out_idx, id_arr, x_stack)
 
     def collect(self, plan: DispatchPlan, ys, host: bool = False):
@@ -299,16 +441,65 @@ class Overlay:
           device ops on the (possibly still executing) result array —
           nothing blocks, results stay ``jax.Array``.
         * ``host=True`` (the streaming engine's delivery path): ``ys``
-          must already be ready (the engine just blocked on it); the
-          stack is read back once, each group output is flattened into
-          one contiguous buffer (the only copy — tiles interleave
-          requests, so a flatten is unavoidable), and per-request slices
-          are numpy VIEWS of it — no per-request device-op dispatch or
-          copy on the hot path.
+          must already be ready (the engine just blocked on it); only
+          the LIVE ``g_total`` tiles and live output rows reach a
+          contiguous host buffer, in ONE bulk gather; every per-group
+          flatten and per-request slice after that is a numpy VIEW —
+          the padding tiles and dead ``max_outputs`` rows are never
+          copied.  On an accelerator the slice+transpose runs device-
+          side (``_gather_live`` — one fused op, tile count bucketed to
+          a multiple of 8 so steady traffic never retraces) so the one
+          host transfer carries live bytes only; for a host-backed
+          result (CPU jax) ``np.asarray`` is already zero-copy, so the
+          gather is a single strided ``np.copyto`` of the live view —
+          no XLA dispatch on the delivery path at all.
 
         Returns one output list per request, in request order; both modes
-        yield bit-identical values.
+        yield bit-identical values.  ``collect_reference`` keeps the
+        seed's full-stack readback as the paired-benchmark baseline.
         """
+        if ys is None:
+            return [[jnp.zeros((0,), self.dtype) for _ in k.dfg.outputs]
+                    for k, _ in plan.requests]
+        if host:
+            if _host_backed(ys):
+                arr = None
+                view = np.asarray(ys)            # zero-copy on CPU
+            else:
+                n_live = max((len(g.kernel.dfg.outputs)
+                              for g in plan.groups), default=1)
+                nt = min(plan.g_pad, _round_up8(plan.g_total))
+                arr = np.asarray(_gather_live(ys, nt, max(n_live, 1)))
+        results: list = [None] * len(plan.requests)
+        for g in plan.groups:
+            n_out = len(g.kernel.dfg.outputs)
+            if host:
+                if arr is None:
+                    # one strided gather per group: exactly this group's
+                    # live output rows, output axis out front so each row
+                    # flattens to a contiguous view
+                    buf = view[g.start:g.start + g.n_tiles, :n_out, :] \
+                        .transpose(1, 0, 2).copy()
+                    flats = [buf[j].reshape(-1) for j in range(n_out)]
+                else:
+                    # [n_live, nt, tile] device-gathered stack: per-group
+                    # flattens are contiguous views of the one transfer
+                    flats = [arr[j, g.start:g.start + g.n_tiles].reshape(-1)
+                             for j in range(n_out)]
+            else:
+                block = ys[g.start:g.start + g.n_tiles]  # [nt, max_out, tile]
+                flat = jnp.moveaxis(block, 1, 0).reshape(ys.shape[1], -1)
+                flats = [flat[j] for j in range(n_out)]
+            off = 0
+            for i, n in zip(g.idxs, g.lens):
+                results[i] = [flats[j][off:off + n] for j in range(n_out)]
+                off += n
+        return results
+
+    def collect_reference(self, plan: DispatchPlan, ys, host: bool = False):
+        """The seed's collect: full padded-stack readback + one
+        ``ascontiguousarray`` copy per live output row.  Paired-benchmark
+        baseline; bit-identical to ``collect`` in both modes."""
         if ys is None:
             return [[jnp.zeros((0,), self.dtype) for _ in k.dfg.outputs]
                     for k, _ in plan.requests]
@@ -319,8 +510,6 @@ class Overlay:
             n_out = len(g.kernel.dfg.outputs)
             block = ys[g.start:g.start + g.n_tiles]    # [nt, max_out, tile]
             if host:
-                # one contiguous flatten per LIVE output row (not the
-                # padded max_outputs); requests then slice views of it
                 flats = [np.ascontiguousarray(block[:, j, :]).reshape(-1)
                          for j in range(n_out)]
             else:
@@ -344,7 +533,13 @@ class Overlay:
         if not requests:
             return []
         p = self.plan(bank, requests, tile=tile)
-        return self.collect(p, self.execute(bank, self.assemble(p)))
+        ys = self.execute(bank, self.assemble(p))
+        # the lazy collect below never blocks, so there is no engine-style
+        # delivery point to recycle at; the device placement in execute
+        # already copied the staging block, so hand it back now (release
+        # on an unpinned plan only recycles)
+        p.release(bank)
+        return self.collect(p, ys)
 
     # ------------------------------------------------------------ timing
     def time_context_switch(self, kernel: CompiledKernel,

@@ -164,6 +164,14 @@ def vm_exec(ctx_tree, out_idx, x, rf_depth: int = RF_DEPTH):
     return _vm_exec(ctx_tree, out_idx, x)
 
 
+def _vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x):
+    def one(cid, xg):
+        tree = tuple(leaf[cid] for leaf in bank_tree)
+        return _vm_exec(tree, out_idx_bank[cid], xg)
+
+    return jax.vmap(one)(ctx_ids, x)
+
+
 @partial(jax.jit, static_argnames=("rf_depth",))
 def vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x,
                   rf_depth: int = RF_DEPTH):
@@ -180,11 +188,23 @@ def vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x,
     Returns [G, max_outputs, tile]; callers slice each tile's rows down to
     the selected kernel's n_outputs.
     """
-    def one(cid, xg):
-        tree = tuple(leaf[cid] for leaf in bank_tree)
-        return _vm_exec(tree, out_idx_bank[cid], xg)
+    return _vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x)
 
-    return jax.vmap(one)(ctx_ids, x)
+
+@partial(jax.jit, static_argnames=("rf_depth",), donate_argnums=(3,))
+def vm_exec_multi_donated(bank_tree, out_idx_bank, ctx_ids, x,
+                          rf_depth: int = RF_DEPTH):
+    """``vm_exec_multi`` with the tile stack DONATED to the executable.
+
+    Same trace, separate jit cache: ``x`` (the round's [G, rf_depth, tile]
+    staging transfer — by far the largest per-round allocation) is handed
+    to XLA for reuse/free at launch instead of surviving until the round
+    retires.  Caller contract: ``x`` is dead after this call — reading it
+    again raises.  The serving engines consume each batch exactly once,
+    so they opt in via ``Overlay(donate=True)``; the sync ``dispatch``
+    oracle keeps the non-donating entry point.
+    """
+    return _vm_exec_multi(bank_tree, out_idx_bank, ctx_ids, x)
 
 
 def pad_inputs(xs: list[jax.Array], rf_depth: int = RF_DEPTH,

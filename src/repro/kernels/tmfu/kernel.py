@@ -148,14 +148,15 @@ def _tmfu_kernel_multi(ids_ref, op_ref, a_ref, b_ref, imm_ref,  # SMEM
         o_ref[...] = rf_b[...][None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def tmfu_pipeline_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
-                           interpret: bool = True):
-    """Run a mixed-context tile batch: x [G, RF_DEPTH, T] -> [G, RF_DEPTH, T].
+def _tmfu_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
+                   interpret: bool, alias_x: bool):
+    """Shared pallas_call builder for the multi-tenant RF pipeline.
 
-    op/src_a/src_b/imm_i32: stacked bank arrays [N, S, IM] int32;
-    ctx_ids: [G] int32 selecting the context for each batch tile.  One
-    pallas_call, one executable, any mix of resident kernels.
+    ``alias_x`` maps operand 5 (the [G, RF_DEPTH, T] tile stack — same
+    shape/dtype as the output) onto output 0 via ``input_output_aliases``,
+    so the donated input allocation IS the result buffer.  Operand indices
+    count the scalar-prefetch operands: (ctx_ids, op, src_a, src_b, imm) =
+    0..4, x = 5.
     """
     n_bank, n_stages, im = op.shape
     n_tiles, rf_depth, tile = x.shape
@@ -178,8 +179,38 @@ def tmfu_pipeline_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
                             pltpu.VMEM((RF_DEPTH, tile), dtype)],
         ),
         out_shape=jax.ShapeDtypeStruct((n_tiles, RF_DEPTH, tile), dtype),
+        input_output_aliases={5: 0} if alias_x else {},
         interpret=interpret,
     )(ctx_ids, op, src_a, src_b, imm_i32, x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tmfu_pipeline_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
+                           interpret: bool = True):
+    """Run a mixed-context tile batch: x [G, RF_DEPTH, T] -> [G, RF_DEPTH, T].
+
+    op/src_a/src_b/imm_i32: stacked bank arrays [N, S, IM] int32;
+    ctx_ids: [G] int32 selecting the context for each batch tile.  One
+    pallas_call, one executable, any mix of resident kernels.
+    """
+    return _tmfu_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
+                          interpret=interpret, alias_x=False)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(5,))
+def tmfu_pipeline_rf_multi_donated(op, src_a, src_b, imm_i32, ctx_ids, x,
+                                   interpret: bool = True):
+    """``tmfu_pipeline_rf_multi`` with the tile stack donated AND aliased.
+
+    The [G, RF_DEPTH, T] input has exactly the output's shape and dtype,
+    so ``input_output_aliases`` lets the round's staging allocation be
+    reused as its result — zero extra device buffers per round.  Caller
+    contract: ``x`` is dead after this call (the serving engines consume
+    each batch exactly once; see ``Overlay(donate=True)``).
+    """
+    return _tmfu_rf_multi(op, src_a, src_b, imm_i32, ctx_ids, x,
+                          interpret=interpret, alias_x=True)
 
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))

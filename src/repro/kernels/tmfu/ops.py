@@ -9,7 +9,8 @@ import numpy as np
 from repro.core.isa import RF_DEPTH
 from repro.kernels.tmfu.kernel import (DEFAULT_BLOCK_BATCH,
                                        tmfu_pipeline_rf,
-                                       tmfu_pipeline_rf_multi)
+                                       tmfu_pipeline_rf_multi,
+                                       tmfu_pipeline_rf_multi_donated)
 
 
 def _imm_to_i32(imm: jax.Array) -> jax.Array:
@@ -43,20 +44,26 @@ def tmfu_pipeline(ctx, x: jax.Array,
 
 
 def tmfu_pipeline_multi(bank, ctx_ids: jax.Array, x: jax.Array,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        donate: bool = False) -> jax.Array:
     """Execute a mixed-context tile batch on the Pallas datapath.
 
     bank: repro.core.bank.ContextBank; ctx_ids: [G] int32 slot ids;
     x: [G, RF_DEPTH, tile].  Returns [G, max_outputs, tile] — each tile's
     rows gathered through its selected context's output slots (callers
     slice to the kernel's real n_outputs).
+
+    ``donate=True`` hands ``x`` to the pipeline for in-place reuse
+    (``input_output_aliases`` — the RF stack has exactly the input's
+    shape); ``x`` is dead afterwards, so only consume-once callers (the
+    serving engines) may set it.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     op, src_a, src_b, imm = bank.tree()
-    rf = tmfu_pipeline_rf_multi(op, src_a, src_b, _imm_to_i32(imm),
-                                ctx_ids.astype(jnp.int32), x,
-                                interpret=interpret)
+    rf_fn = tmfu_pipeline_rf_multi_donated if donate else tmfu_pipeline_rf_multi
+    rf = rf_fn(op, src_a, src_b, _imm_to_i32(imm),
+               ctx_ids.astype(jnp.int32), x, interpret=interpret)
     out_rows = bank.out_idx[ctx_ids]                       # [G, max_out]
     return jnp.take_along_axis(rf, out_rows[:, :, None], axis=1)
 

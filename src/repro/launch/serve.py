@@ -118,6 +118,22 @@ def tenant_latency_summary(samples, qs=LATENCY_QS, slo_s=None) -> dict:
     return out
 
 
+#: the staged-pipeline wall-clock counters surfaced as stats()["stage_walls"]
+STAGE_WALL_KEYS = ("plan_s", "assemble_s", "execute_s", "collect_s")
+
+
+def _stage_walls(telemetry) -> dict:
+    """Cumulative per-stage walls of the streaming pipeline (seconds).
+
+    ``plan_s``/``assemble_s`` are pure host work, ``execute_s`` is launch
+    dispatch plus the retire-time device wait, ``collect_s`` is the
+    readback + slicing.  The ``flush_sync`` barrier oracle goes through
+    ``Overlay.dispatch`` and does not contribute.
+    """
+    return {k: float(telemetry.counter(f"engine.{k}"))
+            for k in STAGE_WALL_KEYS}
+
+
 @dataclasses.dataclass
 class _Inflight:
     """A launched-but-undelivered round of the staged pipeline."""
@@ -166,6 +182,7 @@ class OverlayServer:
                  default_admission: tuple | None = None,
                  clock=time.monotonic, metrics_window: int = 65536,
                  device=None, slo_s=None, telemetry=None):
+        from repro.core.arena import RoundArena
         from repro.core.bank import ContextBank
         from repro.core.overlay import Overlay
         #: delivery-latency SLO target in seconds (None = no SLO
@@ -185,10 +202,19 @@ class OverlayServer:
         #: device this server's bank + rounds are pinned to (None = default
         #: placement); set by ShardedOverlayServer, one device per replica
         self.device = device
+        #: zero-copy round pipeline: the overlay assembles into pooled
+        #: arena blocks (recycled at ``plan.release`` after delivery, so
+        #: pipelined rounds N/N+1 each own their block) and donates the
+        #: device tile stack to the executor — the engine consumes each
+        #: batch exactly once, which is the donation contract.  The
+        #: ``flush_sync`` oracle goes through ``Overlay.dispatch``, which
+        #: recycles its own block after launch.
         self.overlay = Overlay(s_max=s_max, dtype=dtype, backend=backend,
-                               device=device)
+                               device=device, arena=RoundArena(),
+                               donate=True)
         self.bank = ContextBank(bank_capacity, s_max=s_max, dtype=dtype,
                                 max_outputs=max_outputs, device=device)
+        self.bank.attach_arena(self.overlay.arena)
         self.tile = tile
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
@@ -389,19 +415,31 @@ class OverlayServer:
                 excluding=round_kernels) < needed:
             self._retire_oldest()
         pairs = [(r.kernel, r.xs) for r in reqs]
+        plan_s = 0.0
         while True:
+            t0 = self.clock()
             try:
                 plan = self.overlay.plan(self.bank, pairs, tile=self.tile,
                                          pin=True)
+                plan_s += self.clock() - t0
                 break
             except BankError:
                 # belt-and-braces: plan unwinds its own pins on failure, so
                 # retiring one more round and retrying is always safe
+                plan_s += self.clock() - t0
                 if not self._inflight:
                     raise
                 self._retire_oldest()
+        t1 = self.clock()
         batch = self.overlay.assemble(plan)
+        t2 = self.clock()
         ys = self.overlay.execute(self.bank, batch)
+        # stage walls (streaming path only; flush_sync goes through the
+        # dispatch oracle): plan/assemble are host work, execute here is
+        # launch dispatch — the device wait lands in execute_s at retire
+        self.telemetry.inc("engine.plan_s", plan_s)
+        self.telemetry.inc("engine.assemble_s", t2 - t1)
+        self.telemetry.inc("engine.execute_s", self.clock() - t2)
         round_no = int(self.telemetry.inc("engine.rounds")) - 1
         self._inflight.append(_Inflight(reqs=reqs, plan=plan, ys=ys,
                                         round_no=round_no,
@@ -410,12 +448,16 @@ class OverlayServer:
     def _retire_oldest(self) -> list:
         """Deliver the oldest in-flight round; returns its tickets."""
         inf = self._inflight.popleft()
+        t0 = self.clock()
         if inf.ys is not None:
             jax.block_until_ready(inf.ys)
-        # host=True: one device readback + one flatten per group output;
+        t1 = self.clock()
+        # host=True: live tiles/rows sliced device-side, one readback;
         # per-request slicing is numpy views, never device-op dispatch
         outs = self.overlay.collect(inf.plan, inf.ys, host=True)
         now = self.clock()
+        self.telemetry.inc("engine.execute_s", t1 - t0)   # device wait
+        self.telemetry.inc("engine.collect_s", now - t1)
         tickets = []
         for r, y in zip(inf.reqs, outs):
             self._done[r.ticket] = y
@@ -623,6 +665,7 @@ class OverlayServer:
                   "queued": self.queued, "queued_tiles": self.queued_tiles,
                   "tenants": len(self._flows),
                   "round_policy": type(self.round_policy).__name__,
+                  "stage_walls": _stage_walls(self.telemetry),
                   "tenant_latency": self.tenant_latency_percentiles()})
         return s
 
@@ -1358,6 +1401,9 @@ class ShardedOverlayServer:
              "orphan_claims": int(
                  self.telemetry.counter("fleet.orphan_claims")),
              "claims": int(self.telemetry.counter("fleet.claims")),
+             # replicas write through MultiSink(own, fleet), so these
+             # walls aggregate the whole fleet incl. drained replicas
+             "stage_walls": _stage_walls(self.telemetry),
              "tenant_latency": self.tenant_latency_percentiles()}
         s.update(self.router.stats())
         if self.autoscaler is not None:

@@ -17,16 +17,22 @@ Composition mirrors the layering:
 
 from __future__ import annotations
 
-# ContextBank.stats(), folded into every engine stats() dict.
+# ContextBank.stats(), folded into every engine stats() dict.  ``arena``
+# nests the attached RoundArena's occupancy/recycle counters (None when
+# the bank serves no pooled rounds) — a leaking arena bucket shows up as
+# ``outstanding`` never returning to zero.
 BANK_STATS_KEYS = frozenset({
     "capacity", "resident", "free", "loads", "evictions", "hits",
     "pinned", "generation", "ctx_cache", "occupancy", "pinned_fraction",
+    "arena",
 })
 
-# OverlayServer.stats() minus the bank keys.
+# OverlayServer.stats() minus the bank keys.  ``stage_walls`` nests the
+# cumulative plan_s/assemble_s/execute_s/collect_s pipeline walls.
 ENGINE_STATS_KEYS = frozenset({
     "submits", "rounds", "requests", "pending", "inflight", "queued",
-    "queued_tiles", "tenants", "round_policy", "tenant_latency",
+    "queued_tiles", "tenants", "round_policy", "stage_walls",
+    "tenant_latency",
 })
 
 # ResidencyRouter.stats(); WorkStealingRouter adds STEAL_STATS_KEYS.
@@ -45,12 +51,15 @@ AUTOSCALER_STATS_KEYS = frozenset({
 })
 
 # ShardedOverlayServer.stats() minus router/autoscaler keys.
+# ``stage_walls`` aggregates the whole fleet (replicas write through
+# MultiSink to the fleet sink, so drained replicas' walls survive).
 FLEET_STATS_KEYS = frozenset({
     "replicas", "submits", "pending", "queue_depth", "queued_tiles",
     "per_replica", "rounds", "requests", "evictions", "scale_ups",
     "scale_downs", "evacuated_requests", "evacuated_tiles",
     "replicas_retired", "retired_lifetime_s", "peak_replicas",
-    "orphaned_results", "orphan_claims", "claims", "tenant_latency",
+    "orphaned_results", "orphan_claims", "claims", "stage_walls",
+    "tenant_latency",
 })
 
 # AutoPump.stats() adds these on top of the wrapped server's dict.

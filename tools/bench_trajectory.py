@@ -61,6 +61,9 @@ METRICS = {
     "slo": ("slo_attainment",
             ("latency_p99_ms", "bulk_p99_ms", "flat_latency_p99_ms",
              "policy", "quantum_tiles", "lat_quantum", "configs")),
+    "hot_path": ("hotpath_rps",
+                 ("g_total", "tile", "assemble_speedup", "collect_speedup",
+                  "stage_speedup", "assemble_gbps", "retraces")),
 }
 
 
