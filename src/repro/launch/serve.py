@@ -66,15 +66,16 @@ import numpy as np
 
 from repro.sched import (AdmissionControl, AdmissionError, AutoPump,
                          DeficitRoundRobin, Flow, OverlayRequest,
-                         TokenBucket, make_round_policy, make_router)
+                         TokenBucket, WorkRequest, make_round_policy,
+                         make_router)
 from repro.sched.rounds import DEFAULT_TENANT
 from repro.telemetry import InMemorySink, MultiSink, adopt_counters
 
 __all__ = [
     "AdmissionControl", "AdmissionError", "AutoPump", "DEFAULT_TENANT",
     "DeficitRoundRobin", "OverlayRequest", "OverlayServer",
-    "ShardedOverlayServer", "TokenBucket", "main", "overlay_demo",
-    "tenant_latency_summary",
+    "ShardedOverlayServer", "TokenBucket", "WorkRequest", "main",
+    "overlay_demo", "tenant_latency_summary",
 ]
 
 
@@ -143,6 +144,7 @@ class _Inflight:
     ys: object                # device result future, or None (empty round)
     round_no: int
     t_launch: float = 0.0     # engine clock at launch (RoundPolicy.observe)
+    work_outs: dict | None = None   # ticket -> WorkRequest fn() output
 
 
 class OverlayServer:
@@ -302,6 +304,37 @@ class OverlayServer:
         self.telemetry.inc("engine.submits")
         return t
 
+    def submit_work(self, fn, tenant: str = DEFAULT_TENANT, *,
+                    cost: int = 1, label: str = "work",
+                    key: tuple | None = None) -> int:
+        """Admit + enqueue one host-side work item; returns its ticket.
+
+        ``fn`` is a zero-arg callable the engine runs when the round
+        policy grants this flow a round slot; its return value is the
+        ticket's result (claimed via ``result``/``try_result``/
+        ``flush``/``as_completed`` like any kernel request).  ``cost``
+        is the tile budget the work charges against the tenant's
+        admission bucket and flow deficit — how large the work "looks"
+        to the scheduler.  This is how the training tenant rides the
+        SAME rounds/tickets/telemetry as serving traffic (see
+        ``launch.trainer_tenant``): the scheduler decides when bulk
+        work runs, not a side channel.
+        """
+        cost = max(1, int(cost))
+        self.admission.admit(tenant, cost)
+        t = self._next_ticket
+        self._next_ticket += 1
+        req = WorkRequest(ticket=t, kernel=None, xs=[], tenant=tenant,
+                          key=key if key is not None
+                          else ("__work__", tenant, label),
+                          cost=cost, t_submit=self.clock(), fn=fn,
+                          label=label)
+        self._enqueue(req)
+        self._records[t] = {"tenant": tenant, "t_submit": req.t_submit,
+                            "cost": cost, "t_done": None, "round": None}
+        self.telemetry.inc("engine.submits")
+        return t
+
     def _enqueue(self, req: OverlayRequest) -> None:
         flow = self._flows.get(req.tenant)
         if flow is None:
@@ -336,6 +369,31 @@ class OverlayServer:
         router may move (in-flight rounds are never stolen).  Scans the
         queues, so it is read at rebalance time, not per submit."""
         return sum(r.cost for f in self._flows.values() for r in f.queue)
+
+    def queued_by_tenant(self) -> dict[str, int]:
+        """Queued-only tiles per tenant (drained flows absent).  The
+        training tenant's yield-point probe — "is latency-tier work
+        waiting?" — reads this between micro-steps.  Scans the queues,
+        so it is for boundary checks, not per-submit hot paths."""
+        return {t: sum(r.cost for r in f.queue)
+                for t, f in self._flows.items() if f.queue}
+
+    def make_preemptible(self, bulk_tenants=(), bulk_prefix=None):
+        """Wrap this engine's round policy in a
+        :class:`~repro.sched.preempt.PreemptibleTier` in place and
+        return the tier.  Idempotent: repeated calls merge their
+        ``bulk_tenants`` into the existing tier.  After this, flows of
+        the named tenants (or any tenant matching the bulk prefix) only
+        form rounds when every latency-tier flow is idle."""
+        from repro.sched.preempt import BULK_PREFIX, PreemptibleTier
+        if isinstance(self.round_policy, PreemptibleTier):
+            self.round_policy.add_bulk(bulk_tenants)
+            return self.round_policy
+        self.round_policy = PreemptibleTier(
+            self.round_policy, bulk_tenants=bulk_tenants,
+            bulk_prefix=bulk_prefix if bulk_prefix is not None
+            else BULK_PREFIX)
+        return self.round_policy
 
     # ------------------------------------------------------- round formation
     def _form_round(self) -> list | None:
@@ -402,10 +460,36 @@ class OverlayServer:
         return t
 
     # ------------------------------------------------------ staged pipeline
+    def _run_work(self, work_reqs: list) -> dict:
+        """Run a round's work callables (request order) host-side; the
+        shared execution point of the streaming and ``flush_sync``
+        paths, so a work item's observable order is identical on both.
+        Walls land in ``engine.work_s`` (not the device stage walls)."""
+        t0 = self.clock()
+        work_outs = {r.ticket: r.fn() for r in work_reqs}
+        self.telemetry.inc("engine.work_s", self.clock() - t0)
+        self.telemetry.inc("engine.work_items", len(work_reqs))
+        return work_outs
+
     def _launch_round(self, reqs: list) -> None:
-        """plan (pinned) -> assemble -> execute; delivery happens later."""
+        """plan (pinned) -> assemble -> execute; delivery happens later.
+
+        Work requests carry no kernel: the device stages skip them, their
+        callables run host-side at launch (after the device call is
+        dispatched, so host work overlaps device execution), and their
+        outputs deliver through the normal ticket path at retire."""
         from repro.core.bank import BankError
-        round_kernels = {r.key: r.kernel for r in reqs}
+        kern_reqs = [r for r in reqs if not isinstance(r, WorkRequest)]
+        work_reqs = [r for r in reqs if isinstance(r, WorkRequest)]
+        if not kern_reqs:
+            work_outs = self._run_work(work_reqs)
+            round_no = int(self.telemetry.inc("engine.rounds")) - 1
+            self._inflight.append(_Inflight(reqs=reqs, plan=None, ys=None,
+                                            round_no=round_no,
+                                            t_launch=self.clock(),
+                                            work_outs=work_outs))
+            return
+        round_kernels = {r.key: r.kernel for r in kern_reqs}
         needed = sum(1 for k in round_kernels.values() if k not in self.bank)
         # retire in-flight rounds until the round's NEW contexts fit the
         # unpinned portion of the bank; the round's own resident kernels
@@ -414,7 +498,7 @@ class OverlayServer:
         while self._inflight and self.bank.evictable_capacity(
                 excluding=round_kernels) < needed:
             self._retire_oldest()
-        pairs = [(r.kernel, r.xs) for r in reqs]
+        pairs = [(r.kernel, r.xs) for r in kern_reqs]
         plan_s = 0.0
         while True:
             t0 = self.clock()
@@ -440,10 +524,12 @@ class OverlayServer:
         self.telemetry.inc("engine.plan_s", plan_s)
         self.telemetry.inc("engine.assemble_s", t2 - t1)
         self.telemetry.inc("engine.execute_s", self.clock() - t2)
+        work_outs = self._run_work(work_reqs) if work_reqs else None
         round_no = int(self.telemetry.inc("engine.rounds")) - 1
         self._inflight.append(_Inflight(reqs=reqs, plan=plan, ys=ys,
                                         round_no=round_no,
-                                        t_launch=self.clock()))
+                                        t_launch=self.clock(),
+                                        work_outs=work_outs))
 
     def _retire_oldest(self) -> list:
         """Deliver the oldest in-flight round; returns its tickets."""
@@ -454,12 +540,17 @@ class OverlayServer:
         t1 = self.clock()
         # host=True: live tiles/rows sliced device-side, one readback;
         # per-request slicing is numpy views, never device-op dispatch
-        outs = self.overlay.collect(inf.plan, inf.ys, host=True)
+        # (pure-work rounds have no plan and skip the device stages)
+        outs = (self.overlay.collect(inf.plan, inf.ys, host=True)
+                if inf.plan is not None else [])
         now = self.clock()
         self.telemetry.inc("engine.execute_s", t1 - t0)   # device wait
         self.telemetry.inc("engine.collect_s", now - t1)
         tickets = []
-        for r, y in zip(inf.reqs, outs):
+        kern_outs = iter(outs)
+        for r in inf.reqs:
+            y = (inf.work_outs[r.ticket] if isinstance(r, WorkRequest)
+                 else next(kern_outs))
             self._done[r.ticket] = y
             rec = self._records[r.ticket]
             rec["t_done"] = now
@@ -468,7 +559,8 @@ class OverlayServer:
             self.telemetry.event("deliver", tenant=r.tenant, cost=r.cost,
                                  round=inf.round_no,
                                  latency_s=now - rec["t_submit"])
-        inf.plan.release(self.bank)
+        if inf.plan is not None:
+            inf.plan.release(self.bank)
         round_cost = sum(r.cost for r in inf.reqs)
         self._pending_tiles -= round_cost
         self.telemetry.inc("engine.delivered", len(inf.reqs))
@@ -593,12 +685,19 @@ class OverlayServer:
         results: dict[int, list] = {}
         while (reqs := self._form_round()) is not None:
             t_launch = self.clock()
-            outs = self.overlay.dispatch(
-                self.bank, [(r.kernel, r.xs) for r in reqs], tile=self.tile)
+            kern_reqs = [r for r in reqs if not isinstance(r, WorkRequest)]
+            work_reqs = [r for r in reqs if isinstance(r, WorkRequest)]
+            outs = (self.overlay.dispatch(
+                self.bank, [(r.kernel, r.xs) for r in kern_reqs],
+                tile=self.tile) if kern_reqs else [])
             jax.block_until_ready([y for ys in outs for y in ys])
+            work_outs = self._run_work(work_reqs) if work_reqs else {}
             now = self.clock()
             round_no = int(self.telemetry.inc("engine.rounds")) - 1
-            for r, y in zip(reqs, outs):
+            kern_outs = iter(outs)
+            for r in reqs:
+                y = (work_outs[r.ticket] if isinstance(r, WorkRequest)
+                     else next(kern_outs))
                 results[r.ticket] = y
                 self._records[r.ticket].update(t_done=now, round=round_no)
                 self.telemetry.event(
@@ -798,6 +897,9 @@ class ShardedOverlayServer:
                                           clock=clock)
         self.clock = clock
         self.metrics_window = metrics_window
+        #: (bulk tenant set, bulk prefix) once make_preemptible was
+        #: called — future add_replica replicas get the tier installed
+        self._bulk_spec: tuple[set, str] | None = None
         self._owner: dict[int, tuple[int, int]] = {}   # global -> (rep, loc)
         self._global: list[dict[int, int]] = [
             {} for _ in self.replicas]                 # rep: loc -> global
@@ -918,10 +1020,16 @@ class ShardedOverlayServer:
         work, then the queued requests leave the victim and are adopted
         under fresh thief tickets with their global tickets re-homed.
         In-flight rounds and pins are never touched.
+
+        Work-request groups (``kernel is None`` — host-side work has no
+        context) skip the prefetch/republish steps: they are moved by
+        queue surgery alone, which is how ``drain_replica`` evacuates a
+        training tenant's queued micro-rounds loss-free.
         """
         thief_rep = self.replicas[thief]
-        thief_rep.bank.prefetch([kernel])
-        self.directory.republish_current(kernel, thief, thief_rep.bank)
+        if kernel is not None:
+            thief_rep.bank.prefetch([kernel])
+            self.directory.republish_current(kernel, thief, thief_rep.bank)
         stolen = self.replicas[victim].steal_queued(key)
         self.adopt_stolen(victim, thief, stolen)
         return [req for req, _ in stolen]
@@ -947,6 +1055,9 @@ class ShardedOverlayServer:
         rep = OverlayServer(round_policy=self._policy_factory(),
                             device=device, telemetry=self._replica_sink(),
                             **self._replica_kw)
+        if self._bulk_spec is not None:
+            rep.make_preemptible(self._bulk_spec[0],
+                                 bulk_prefix=self._bulk_spec[1])
         self.replicas.append(rep)
         self.devices.append(device)
         self._global.append({})
@@ -1122,6 +1233,48 @@ class ShardedOverlayServer:
         self._global[rep][loc] = t
         self.telemetry.inc("fleet.submits")
         return t
+
+    def submit_work(self, fn, tenant: str = DEFAULT_TENANT, *,
+                    cost: int = 1, label: str = "work",
+                    key: tuple | None = None) -> int:
+        """Admit globally, enqueue host-side work on the least-loaded
+        replica (work has no context residency to chase); returns a
+        global ticket.  See ``OverlayServer.submit_work``."""
+        cost = max(1, int(cost))
+        self.admission.admit(tenant, cost)
+        rep = min(range(len(self.replicas)),
+                  key=lambda i: self.replicas[i].pending_tiles)
+        loc = self.replicas[rep].submit_work(fn, tenant=tenant, cost=cost,
+                                             label=label, key=key)
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._owner[t] = (rep, loc)
+        self._global[rep][loc] = t
+        self.telemetry.inc("fleet.submits")
+        return t
+
+    def queued_by_tenant(self) -> dict[str, int]:
+        """Fleet-wide queued-only tiles per tenant (see
+        ``OverlayServer.queued_by_tenant``)."""
+        out: dict[str, int] = {}
+        for rep in self.replicas:
+            for tenant, tiles in rep.queued_by_tenant().items():
+                out[tenant] = out.get(tenant, 0) + tiles
+        return out
+
+    def make_preemptible(self, bulk_tenants=(), bulk_prefix=None):
+        """Install the preemptible bulk tier on EVERY replica's round
+        policy (idempotent; replicas added later inherit it).  Returns
+        the per-replica tiers, replica order."""
+        from repro.sched.preempt import BULK_PREFIX
+        prefix = bulk_prefix if bulk_prefix is not None else BULK_PREFIX
+        if self._bulk_spec is None:
+            self._bulk_spec = (set(bulk_tenants), prefix)
+        else:
+            self._bulk_spec[0].update(bulk_tenants)
+        return [rep.make_preemptible(self._bulk_spec[0],
+                                     bulk_prefix=self._bulk_spec[1])
+                for rep in self.replicas]
 
     @property
     def pending(self) -> int:

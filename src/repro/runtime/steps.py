@@ -12,6 +12,23 @@ from repro.runtime import optim as O
 from repro.runtime.compress import compress_decompress
 
 
+def decorate_batch(cfg, dc, batch, seq_len: int | None = None):
+    """Attach the zero vision/frame embeds that archs with those towers
+    expect, in place; returns the batch.  The single batch-shaping point
+    shared by the CLI trainer (``launch.train``) and the co-scheduled
+    training tenant (``launch.trainer_tenant``) — the bit-identity
+    differential between the two paths depends on them building the
+    SAME batch for the same step."""
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jnp.zeros(
+            (dc.local_batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = jnp.zeros(
+            (dc.local_batch, seq_len or dc.seq_len, cfg.d_model),
+            jnp.bfloat16)
+    return batch
+
+
 def make_train_step(cfg, oc: O.OptConfig, *, compress_grads: bool = False,
                     mixed: bool = False):
     """(params, opt_state, batch) -> (params, opt_state, metrics).

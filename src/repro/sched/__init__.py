@@ -25,10 +25,11 @@ See docs/SCHEDULING.md for the policy-author guide.
 from repro.sched.admission import (AdmissionControl, AdmissionError,
                                    TokenBucket)
 from repro.sched.autoscale import AutoscalePolicy, PressureAutoscaler
+from repro.sched.preempt import BULK_PREFIX, PreemptibleTier
 from repro.sched.pump import AutoPump
 from repro.sched.rounds import (ROUND_POLICIES, CoalescingPolicy,
                                 DeficitRoundRobin, DynamicTilePolicy, Flow,
-                                OverlayRequest, RoundPolicy,
+                                OverlayRequest, RoundPolicy, WorkRequest,
                                 make_round_policy)
 from repro.sched.routing import (ResidencyRouter, RouterPolicy,
                                  WorkStealingRouter, make_router)
@@ -37,8 +38,9 @@ __all__ = [
     "AdmissionControl", "AdmissionError", "TokenBucket",
     "AutoscalePolicy", "PressureAutoscaler",
     "AutoPump",
+    "BULK_PREFIX", "PreemptibleTier",
     "ROUND_POLICIES", "RoundPolicy", "DeficitRoundRobin",
     "CoalescingPolicy", "DynamicTilePolicy", "Flow", "OverlayRequest",
-    "make_round_policy",
+    "WorkRequest", "make_round_policy",
     "RouterPolicy", "ResidencyRouter", "WorkStealingRouter", "make_router",
 ]

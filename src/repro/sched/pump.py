@@ -165,6 +165,20 @@ class AutoPump:
         self._wake.set()
         return ticket
 
+    def submit_work(self, fn, tenant=None, **kw) -> int:
+        """Thread-safe ``server.submit_work``; the pump runs ``fn`` on
+        its own thread when the round policy grants the flow a slot.
+        NOTE the pump holds the engine lock for a whole pump tick, so a
+        work callable observes concurrent latency submits only at
+        round boundaries — bulk submitters should keep work items small
+        (the training tenant's micro-round contract)."""
+        if tenant is not None:
+            kw["tenant"] = tenant
+        with self._lock:
+            ticket = self.server.submit_work(fn, **kw)
+        self._wake.set()
+        return ticket
+
     def try_result(self, ticket: int):
         """Non-blocking thread-safe claim (see ``server.try_result``)."""
         with self._lock:

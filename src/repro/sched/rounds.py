@@ -74,6 +74,33 @@ class OverlayRequest:
 
 
 @dataclasses.dataclass
+class WorkRequest(OverlayRequest):
+    """One queued host-side work item (e.g. a training micro-round).
+
+    A work request rides the SAME flows, rounds, tickets, and telemetry
+    as kernel requests — that is the whole point: the scheduler decides
+    when bulk work runs, not a side channel.  It carries no kernel
+    (``kernel is None``) and no inputs; instead the engine calls ``fn()``
+    at round launch and delivers its return value through the ticket.
+    ``cost`` is the tile budget the work charges against its flow's
+    deficit (how big the work "looks" to the round policy), and ``key``
+    groups consecutive work items the way a context key groups kernel
+    requests (steal/evacuation move whole key groups).
+    """
+
+    fn: object = None             # zero-arg callable, run at round launch
+    label: str = "work"
+
+    @property
+    def name(self) -> str:        # no kernel.program to read the name off
+        return self.label
+
+    @property
+    def batch(self) -> int:       # no primary inputs; tile math uses cost
+        return 0
+
+
+@dataclasses.dataclass
 class Flow:
     """Per-tenant FIFO queue + deficit-round-robin state."""
 

@@ -41,6 +41,7 @@ from repro.telemetry.schema import (
     ROUTER_STATS_KEYS,
     SOCKET_STATS_KEYS,
     STEAL_STATS_KEYS,
+    TRAIN_STATS_KEYS,
     check_stats,
 )
 
@@ -60,5 +61,6 @@ __all__ = [
     "ROUTER_STATS_KEYS",
     "SOCKET_STATS_KEYS",
     "STEAL_STATS_KEYS",
+    "TRAIN_STATS_KEYS",
     "AUTOSCALER_STATS_KEYS",
 ]

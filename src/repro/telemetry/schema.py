@@ -86,20 +86,32 @@ SOCKET_STATS_KEYS = frozenset({
     "wire_reparked", "gateway",
 })
 
+# TrainingTenant.stats() (launch.trainer_tenant): the co-scheduled
+# training run's own counters.  ``steps``/``micro_rounds`` advance per
+# committed yield point; ``preemptions``/``resumes`` count the
+# between-micro-step yields to latency traffic and the submits that
+# pick the run back up (paired 1:1 once the run finishes);
+# ``yield_wall_s`` is host wall spent inside micro-rounds.
+TRAIN_STATS_KEYS = frozenset({
+    "tenant", "steps", "total_steps", "micro_rounds", "preemptions",
+    "resumes", "yield_wall_s", "last_loss", "done", "outstanding",
+})
+
 _KINDS = {
     "engine": (BANK_STATS_KEYS | ENGINE_STATS_KEYS, PUMP_STATS_KEYS),
     "fleet": (FLEET_STATS_KEYS | ROUTER_STATS_KEYS,
               STEAL_STATS_KEYS | AUTOSCALER_STATS_KEYS | PUMP_STATS_KEYS),
     "gateway": (GATEWAY_STATS_KEYS, frozenset()),
     "socket": (SOCKET_STATS_KEYS, frozenset()),
+    "train": (TRAIN_STATS_KEYS, frozenset()),
 }
 
 
 def check_stats(kind: str, stats: dict) -> None:
     """Assert ``stats`` matches the schema for ``kind``.
 
-    ``kind`` is ``"engine"``, ``"fleet"``, ``"gateway"``, or
-    ``"socket"``.  Every
+    ``kind`` is ``"engine"``, ``"fleet"``, ``"gateway"``,
+    ``"socket"``, or ``"train"``.  Every
     required key must be present and no key outside required ∪ optional
     may appear; raises ``AssertionError`` naming the drift either way.
     """

@@ -44,8 +44,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_LEDGER = os.path.join(REPO, "BENCH_trajectory.json")
 DEFAULT_ARTIFACTS = os.path.join(REPO, "artifacts", "bench")
 
-#: benchmark name (artifact file stem) -> (headline throughput key,
-#: context keys copied alongside for reading the ledger without the run)
+#: benchmark name (artifact file stem) -> (headline metric key,
+#: context keys copied alongside for reading the ledger without the run
+#: [, direction]).  Direction defaults to "higher" (throughput-style:
+#: the gate fails when the value DROPS beyond tolerance); "lower" flips
+#: the gate for latency-style headlines (fails when the value RISES).
 METRICS = {
     "sharded": ("sharded_rps", ("replicas", "devices", "speedup")),
     "steal": ("steal_rps", ("replicas", "devices", "speedup")),
@@ -64,7 +67,22 @@ METRICS = {
     "hot_path": ("hotpath_rps",
                  ("g_total", "tile", "assemble_speedup", "collect_speedup",
                   "stage_speedup", "assemble_gbps", "retraces")),
+    "train_serve": ("train_steps_per_s_cosched",
+                    ("serve_p99_under_train_ms", "serve_p99_dedicated_ms",
+                     "p99_degrade_frac", "cosched_efficiency",
+                     "train_steps", "preemptions")),
+    "train_serve_p99": ("serve_p99_under_train",
+                        ("serve_p99_dedicated_ms", "p99_degrade_frac"),
+                        "lower"),
 }
+
+
+def _metric(name):
+    """Normalise a METRICS entry to ``(metric, extras, direction)``."""
+    entry = METRICS.get(name)
+    if entry is None:
+        return None, (), "higher"
+    return entry if len(entry) == 3 else (*entry, "higher")
 
 
 def git_sha(short: bool = True) -> str:
@@ -104,7 +122,7 @@ def append(args) -> int:
             print(f"  skip {name}: no metric mapping "
                   f"(known: {sorted(METRICS)})")
             continue
-        metric, extras = METRICS[name]
+        metric, extras, _ = _metric(name)
         with open(path) as f:
             row = json.load(f)
         if metric not in row:
@@ -131,7 +149,7 @@ def check(args) -> int:
         if len(series) < 2:
             print(f"  {name}: {len(series)} entry — baseline only, pass")
             continue
-        metric, _ = METRICS.get(name, (None, ()))
+        metric, _, direction = _metric(name)
         cur = series[-1]
         prev = next((e for e in reversed(series[:-1])
                      if e.get("sha") != cur.get("sha")), None)
@@ -141,15 +159,21 @@ def check(args) -> int:
         if metric is None or metric not in cur or metric not in prev:
             print(f"  {name}: metric missing, pass", file=sys.stderr)
             continue
-        floor = prev[metric] * (1.0 - args.tolerance)
-        ok = cur[metric] >= floor
+        if direction == "lower":
+            bound = prev[metric] * (1.0 + args.tolerance)
+            ok = cur[metric] <= bound
+            word = "ceiling"
+        else:
+            bound = prev[metric] * (1.0 - args.tolerance)
+            ok = cur[metric] >= bound
+            word = "floor"
         print(f"  {name}: {prev[metric]:.1f} ({prev['sha']}) -> "
               f"{cur[metric]:.1f} ({cur['sha']}) "
-              f"[floor {floor:.1f}] {'ok' if ok else 'REGRESSION'}")
+              f"[{word} {bound:.1f}] {'ok' if ok else 'REGRESSION'}")
         if not ok:
             failures.append(name)
     if failures:
-        print(f"bench_trajectory: throughput regressed >"
+        print(f"bench_trajectory: headline regressed >"
               f"{args.tolerance:.0%} on: {', '.join(failures)}",
               file=sys.stderr)
         return 1
@@ -163,7 +187,7 @@ def show(args) -> int:
         print("bench_trajectory: ledger is empty")
         return 0
     for name, series in sorted(ledger["benchmarks"].items()):
-        metric, _ = METRICS.get(name, (None, ()))
+        metric, _, _ = _metric(name)
         print(f"{name} ({metric}):")
         prev_v = None
         for e in series:
